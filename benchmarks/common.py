@@ -1,0 +1,76 @@
+"""Shared benchmark harness: datasets, index builders (cached), timers."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+
+from repro.core import search as S                    # noqa: E402
+from repro.core.baselines import ALL_BASELINES        # noqa: E402
+from repro.core.dili import bulk_load                 # noqa: E402
+from repro.core.flat import flatten                   # noqa: E402
+from repro.data.datasets import ALL_DATASETS, generate  # noqa: E402
+
+N_KEYS = int(os.environ.get("BENCH_N_KEYS", "300000"))
+N_QUERIES = int(os.environ.get("BENCH_N_QUERIES", "65536"))
+DATASETS = os.environ.get("BENCH_DATASETS", "fb,wikits,logn").split(",")
+
+_cache: dict = {}
+
+
+def dataset(name: str) -> np.ndarray:
+    if ("ds", name) not in _cache:
+        _cache[("ds", name)] = generate(name, N_KEYS, seed=42)
+    return _cache[("ds", name)]
+
+
+def dili_for(name: str, **kw):
+    key = ("dili", name, tuple(sorted(kw.items())))
+    if key not in _cache:
+        keys = dataset(name)
+        d = bulk_load(keys, sample_stride=4, **kw)
+        f = flatten(d)
+        _cache[key] = (keys, d, f, S.device_arrays(f))
+    return _cache[key]
+
+
+def baseline_for(B, name: str):
+    key = ("bl", B.name, name)
+    if key not in _cache:
+        keys = dataset(name)
+        vals = np.arange(len(keys), dtype=np.int64)
+        st = B.build(keys, vals)
+        _cache[key] = (st, B.device(st))
+    return _cache[key]
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (jax block_until_ready on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def queries_for(name: str, n: int = None, seed: int = 7) -> np.ndarray:
+    keys = dataset(name)
+    rng = np.random.default_rng(seed)
+    return keys[rng.integers(0, len(keys), n or N_QUERIES)]
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,152 @@
+"""Roofline table builder (EXPERIMENTS.md section Roofline).
+
+Per single-pod (arch x shape) cell:
+  compute term    = walker_FLOPs_per_device / 197e12        [s]
+  memory term     = walker_bytes_per_device / 819e9         [s]
+  collective term = walker_collective_bytes_per_device / 50e9  [s]
+                    (per-chip traffic charged against ONE ICI link — the
+                     worst-case single-link assumption, documented)
+plus MODEL_FLOPS (analytic 6*N*D / 2*N_active*D + attention terms) and the
+useful-compute ratio MODEL_FLOPS / walker_FLOPs.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hlo_analysis import analyze_file  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def param_counts(arch: str):
+    """(total params, active params) via eval_shape on the real init."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as MDL
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: MDL.init_params(jax.random.PRNGKey(0),
+                                                    cfg))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        names = [str(getattr(k, "key", k)) for k in path]
+        if "moe" in names and any(x in names[-1] for x in
+                                  ("w_up", "w_gate", "w_down")):
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, active, cfg
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per device per step."""
+    from repro.models.config import ALL_SHAPES
+    total, active, cfg = param_counts(arch)
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.hd
+    h = cfg.n_heads
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * active * tokens
+        if cfg.n_heads:          # attention score+value matmuls, fwd+bwd
+            flops += 3 * 2 * 2 * b * h * s * s * hd / 2   # causal half
+    elif shape.kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * active * tokens
+        if cfg.n_heads:
+            flops += 2 * 2 * b * h * s * s * hd / 2
+    else:                        # decode: one token, KV length = s
+        flops = 2.0 * active * b
+        if cfg.n_heads:
+            flops += 2 * 2 * b * h * s * hd
+    return flops / CHIPS
+
+
+def build_table(dryrun_dir: str = "results/dryrun",
+                out_json: str = "results/roofline.json",
+                pattern: str = "*_single"):
+    rows = []
+    for jf in sorted(glob.glob(os.path.join(dryrun_dir,
+                                            pattern + ".json"))):
+        meta = json.load(open(jf))
+        tag = os.path.basename(jf)[:-5]
+        if meta.get("status") == "SKIP":
+            rows.append(dict(cell=tag, arch=meta["arch"],
+                             shape=meta["shape"], status="SKIP",
+                             reason=meta.get("reason", "")))
+            continue
+        if meta.get("status") != "OK":
+            rows.append(dict(cell=tag, arch=meta["arch"],
+                             shape=meta["shape"], status=meta.get("status")))
+            continue
+        hf = jf[:-5] + ".hlo.gz"
+        w = analyze_file(hf)
+        t_c = w["flops"] / PEAK_FLOPS
+        t_m = w["bytes"] / HBM_BW
+        t_x = w["collective_bytes"] / ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m),
+                  ("collective", t_x), key=lambda kv: kv[1])[0]
+        mf = model_flops(meta["arch"], meta["shape"])
+        rows.append(dict(
+            cell=tag, arch=meta["arch"], shape=meta["shape"], status="OK",
+            kind=meta.get("kind"),
+            flops=w["flops"], bytes=w["bytes"],
+            collective_bytes=w["collective_bytes"],
+            collectives=w["collectives"],
+            t_compute=t_c, t_memory=t_m, t_collective=t_x,
+            dominant=dom,
+            model_flops=mf,
+            useful_ratio=mf / max(w["flops"], 1.0),
+            step_time_bound=max(t_c, t_m, t_x),
+            roofline_fraction=t_c / max(t_c, t_m, t_x),
+            mem_peak=meta.get("mem_peak_memory_in_bytes"),
+            cost_flops=meta.get("flops"),
+        ))
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def render_markdown(rows) -> str:
+    def fmt(x, d=3):
+        return f"{x:.{d}g}" if isinstance(x, float) else str(x)
+    out = ["| cell | t_compute (s) | t_memory (s) | t_coll (s) | dominant | "
+           "MODEL_FLOPs/dev | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "SKIP":
+            out.append(f"| {r['cell']} | — | — | — | SKIP "
+                       f"({r.get('reason','')[:40]}) | — | — | — |")
+            continue
+        if r.get("status") != "OK":
+            out.append(f"| {r['cell']} | — | — | — | {r.get('status')} "
+                       f"| — | — | — |")
+            continue
+        out.append(
+            f"| {r['cell']} | {fmt(r['t_compute'])} | {fmt(r['t_memory'])} "
+            f"| {fmt(r['t_collective'])} | **{r['dominant']}** "
+            f"| {fmt(r['model_flops'])} | {fmt(r['useful_ratio'], 2)} "
+            f"| {fmt(r['roofline_fraction'], 2)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = build_table()
+    print(render_markdown(rows))

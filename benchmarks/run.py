@@ -1,0 +1,361 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus `#` section headers).
+Scaled to BENCH_N_KEYS (default 300k; the paper's 200M is one env var away).
+Lookup wall-times are CPU-JAX batched timings — the relative ordering is the
+claim under test; the TPU roofline story lives in benchmarks/roofline.py +
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")   # BEFORE importing jax
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from common import (DATASETS, N_QUERIES, baseline_for, csv_row, dataset,
+                    dili_for, queries_for, time_fn)
+
+from repro.core import search as S                      # noqa: E402
+from repro.core.baselines import ALL_BASELINES          # noqa: E402
+from repro.core.bu_tree import build_bu_tree, bu_search  # noqa: E402
+from repro.core.dili import bulk_load                   # noqa: E402
+from repro.core.flat import flatten                     # noqa: E402
+
+
+def _dili_lookup_time(name: str, **kw) -> tuple[float, dict]:
+    keys, d, f, idx = dili_for(name, **kw)
+    q = jnp.asarray(queries_for(name))
+    md = f.max_depth + 2
+    t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+    v, fnd, nodes, probes = S.search_batch(idx, q, max_depth=md,
+                                           with_stats=True)
+    assert bool(np.asarray(fnd).all())
+    return t, dict(nodes=float(np.asarray(nodes).mean()),
+                   probes=float(np.asarray(probes).mean()),
+                   stats=d.stats())
+
+
+def table4_lookup():
+    """Table 4: lookup time of all methods after bulk loading."""
+    print("# Table 4: lookup ns/query (batched CPU-JAX, scaled datasets)")
+    for name in DATASETS:
+        t, _ = _dili_lookup_time(name)
+        csv_row(f"table4,{name},DILI", t / N_QUERIES * 1e9)
+        tlo, _ = _dili_lookup_time(name, local_optimized=False)
+        csv_row(f"table4,{name},DILI-LO", tlo / N_QUERIES * 1e9)
+        q = jnp.asarray(queries_for(name))
+        for B in ALL_BASELINES:
+            st, dev = baseline_for(B, name)
+            t = time_fn(lambda q: B.lookup(dev, q), q)
+            csv_row(f"table4,{name},{B.name}", t / N_QUERIES * 1e9)
+
+
+def table5_access():
+    """Table 5 proxy: memory touches per query (nodes+slots gathered) —
+    the TPU analogue of LL-cache misses."""
+    print("# Table 5: memory touches per query")
+    for name in DATASETS:
+        _, st_ = _dili_lookup_time(name)
+        csv_row(f"table5,{name},DILI", st_["nodes"] + st_["probes"])
+        q = jnp.asarray(queries_for(name))
+        for B in ALL_BASELINES:
+            stb, dev = baseline_for(B, name)
+            _, _, pr = B.lookup(dev, q)
+            csv_row(f"table5,{name},{B.name}",
+                    float(np.asarray(pr).mean()))
+
+
+def table6_stats():
+    """Table 6: DILI height stats + conflicts per 1K keys."""
+    print("# Table 6: DILI construction statistics")
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        s = d.stats()
+        csv_row(f"table6,{name},min_h", s["min_height"])
+        csv_row(f"table6,{name},max_h", s["max_height"])
+        csv_row(f"table6,{name},avg_h", s["avg_height"])
+        csv_row(f"table6,{name},conflicts_per_1k",
+                1000.0 * s["conflicts"] / len(keys))
+
+
+def fig6_memory_range():
+    """Fig. 6: index sizes + short range queries (<=100 keys)."""
+    print("# Fig 6a: index bytes per key")
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        csv_row(f"fig6a,{name},DILI", f.nbytes() / len(keys))
+        keys, d2, f2, _ = dili_for(name, local_optimized=False)
+        csv_row(f"fig6a,{name},DILI-LO", f2.nbytes() / len(keys))
+        for B in ALL_BASELINES:
+            st, dev = baseline_for(B, name)
+            if B.name == "LIPP":
+                nb = st["flat"].nbytes()
+            else:
+                nb = sum(v.nbytes for v in st.values()
+                         if isinstance(v, np.ndarray))
+            csv_row(f"fig6a,{name},{B.name}", nb / len(keys))
+    print("# Fig 6b: range query us/query (100-key ranges)")
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        rng = np.random.default_rng(3)
+        starts = rng.integers(0, len(keys) - 101, 512)
+        lo = jnp.asarray(keys[starts])
+        hi = jnp.asarray(keys[starts + 100])
+        t = time_fn(lambda lo, hi: S.range_query_batch(idx, lo, hi,
+                                                       max_hits=128), lo, hi)
+        csv_row(f"fig6b,{name},DILI", t / 512 * 1e6)
+
+
+def fig7_workloads():
+    """Fig. 7: read-only/read-heavy/write-heavy/write-only throughput."""
+    print("# Fig 7: workload throughput (us/op; derived=ops/s)")
+    import time as _t
+    for name in DATASETS:
+        keys = dataset(name)
+        half = keys[::2]
+        other = np.setdiff1d(keys, half)
+        rng = np.random.default_rng(4)
+        for wl, n_q, n_i in (("read_only", 20000, 0),
+                             ("read_heavy", 20000, 10000),
+                             ("write_heavy", 10000, 20000),
+                             ("write_only", 0, 20000)):
+            d = bulk_load(half, sample_stride=4)
+            qs = half[rng.integers(0, len(half), max(n_q, 1))]
+            ins = other[rng.integers(0, len(other), max(n_i, 1))]
+            t0 = _t.perf_counter()
+            qi = ii = 0
+            for k in range(n_q + n_i):
+                if (k % 3 == 2 or qi >= n_q) and ii < n_i:
+                    d.insert(float(ins[ii % len(ins)]), k)
+                    ii += 1
+                elif qi < n_q:
+                    d.search(float(qs[qi]))
+                    qi += 1
+            dt = _t.perf_counter() - t0
+            csv_row(f"fig7,{name},{wl}", 1e6 * dt / (n_q + n_i),
+                    f"{(n_q + n_i) / dt:.0f} ops/s")
+
+
+def fig8_deletions():
+    """Fig. 8: read-heavy / deletion-heavy workloads with deletes."""
+    print("# Fig 8: deletion workloads (us/op; derived=ops/s)")
+    import time as _t
+    for name in DATASETS:
+        keys = dataset(name)
+        rng = np.random.default_rng(5)
+        for wl, n_q, n_d in (("read_heavy", 20000, 10000),
+                             ("delete_heavy", 10000, 20000)):
+            d = bulk_load(keys, sample_stride=4)
+            dels = rng.permutation(keys)[:n_d]
+            qs = keys[rng.integers(0, len(keys), n_q)]
+            t0 = _t.perf_counter()
+            qi = di = 0
+            for k in range(n_q + n_d):
+                if (k % 3 == 2 or qi >= n_q) and di < n_d:
+                    d.delete(float(dels[di]))
+                    di += 1
+                elif qi < n_q:
+                    d.search(float(qs[qi]))
+                    qi += 1
+            dt = _t.perf_counter() - t0
+            csv_row(f"fig8,{name},{wl}", 1e6 * dt / (n_q + n_d),
+                    f"{(n_q + n_d) / dt:.0f} ops/s")
+
+
+def table78_hyperparams():
+    """Tables 7/8: rho and lambda sweeps."""
+    print("# Table 7: rho sweep")
+    from repro.core.bu_tree import CostModel
+    name = DATASETS[0]
+    keys = dataset(name)
+    q = jnp.asarray(queries_for(name))
+    for rho in (0.05, 0.1, 0.2, 0.5):
+        d = bulk_load(keys, cm=CostModel(rho=rho), sample_stride=4)
+        f = flatten(d)
+        idx = S.device_arrays(f)
+        md = f.max_depth + 2
+        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        s = d.stats()
+        csv_row(f"table7,rho={rho}", t / N_QUERIES * 1e9,
+                f"avg_h={s['avg_height']:.2f};bytes/key="
+                f"{f.nbytes() / len(keys):.1f}")
+    print("# Table 8: lambda sweep")
+    import time as _t
+    half = keys[::2]
+    other = np.setdiff1d(keys, half)[:30000]
+    for lam in (1.5, 2.0, 4.0, 8.0):
+        d = bulk_load(half, lam=lam, sample_stride=4)
+        t0 = _t.perf_counter()
+        for j, k in enumerate(other):
+            d.insert(float(k), j)
+        t_ins = (_t.perf_counter() - t0) / len(other)
+        f = flatten(d)
+        idx = S.device_arrays(f)
+        md = f.max_depth + 2
+        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        s = d.stats()
+        csv_row(f"table8,lambda={lam}", t / N_QUERIES * 1e9,
+                f"ins_us={t_ins * 1e6:.1f};avg_h={s['avg_height']:.2f};"
+                f"adj={s['adjustments']}")
+
+
+def table9_breakdown():
+    """Table 9: step-1/step-2 breakdown, DILI vs BU-Tree."""
+    print("# Table 9: search step breakdown (probe counts)")
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        rng = np.random.default_rng(6)
+        picks = keys[rng.integers(0, len(keys), 400)]
+        n1 = n2 = 0
+        for k in picks:
+            _, nodes, probes = d.search_stats(float(k))
+            n1 += nodes
+            n2 += probes
+        csv_row(f"table9,{name},DILI", 0.0,
+                f"step1_nodes={n1 / 400:.2f};step2_probes={n2 / 400:.2f}")
+        bu = build_bu_tree(keys, sample_stride=4)
+        nn = pp = 0
+        for k in picks:
+            _, nodes, probes = bu_search(bu, keys, float(k))
+            nn += nodes
+            pp += probes
+        csv_row(f"table9,{name},BU-Tree", 0.0,
+                f"step1_nodes={nn / 400:.2f};step2_probes={pp / 400:.2f}")
+
+
+def table10_12_13_appendix():
+    """Appendix: memory under write-heavy (T10), adjustment ablation (T12),
+    sampled construction (T13)."""
+    print("# Tables 10/12/13 (appendix)")
+    import time as _t
+    for name in DATASETS[:2]:
+        keys = dataset(name)
+        half = keys[::2]
+        other = np.setdiff1d(keys, half)[:40000]
+        d = bulk_load(half, sample_stride=4)
+        before = d.stats()["memory_bytes"]
+        for j, k in enumerate(other):
+            d.insert(float(k), j)
+        after = d.stats()["memory_bytes"]
+        csv_row(f"table10,{name}", 0.0, f"before={before};after={after}")
+        # T12: adjustments off (lambda = inf) vs on
+        d2 = bulk_load(half, lam=1e18, sample_stride=4)
+        t0 = _t.perf_counter()
+        for j, k in enumerate(other):
+            d2.insert(float(k), j)
+        t_noadj = (_t.perf_counter() - t0) / len(other)
+        s2 = d2.stats()
+        csv_row(f"table12,{name},DILI-AD", t_noadj * 1e6,
+                f"avg_h={s2['avg_height']:.2f}")
+        d3 = bulk_load(half, sample_stride=4)
+        t0 = _t.perf_counter()
+        for j, k in enumerate(other):
+            d3.insert(float(k), j)
+        t_adj = (_t.perf_counter() - t0) / len(other)
+        s3 = d3.stats()
+        csv_row(f"table12,{name},DILI", t_adj * 1e6,
+                f"avg_h={s3['avg_height']:.2f};adj={s3['adjustments']}")
+        # T13: sampled construction
+        t0 = _t.perf_counter()
+        bulk_load(keys, sample_stride=1)
+        t_full = _t.perf_counter() - t0
+        t0 = _t.perf_counter()
+        bulk_load(keys, sample_stride=4)
+        t_samp = _t.perf_counter() - t0
+        csv_row(f"table13,{name}", 0.0,
+                f"build_full_s={t_full:.1f};build_sampled_s={t_samp:.1f}")
+
+
+def fig9_scale():
+    """Fig. 9a: lookup cost vs cardinality."""
+    print("# Fig 9a: scalability (ns/query vs n)")
+    from repro.data.datasets import generate
+    rng = np.random.default_rng(8)
+    for n in (50000, 100000, 200000, 400000):
+        keys = generate("fb", n, seed=42)
+        d = bulk_load(keys, sample_stride=4)
+        f = flatten(d)
+        idx = S.device_arrays(f)
+        q = jnp.asarray(keys[rng.integers(0, n, N_QUERIES)])
+        md = f.max_depth + 2
+        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        csv_row(f"fig9a,n={n}", t / N_QUERIES * 1e9)
+
+
+def fig10_shift():
+    """Fig. 9b/10: distribution shift / skewed writes."""
+    print("# Fig 10: skewed inserts into an FB-built index")
+    import time as _t
+    fb = dataset("fb")
+    logn = dataset("logn")
+    span = fb[-1] - fb[0]
+    shifted = fb[0] + (logn - logn[0]) / (logn[-1] - logn[0]) * span * 0.1
+    shifted = np.setdiff1d(np.unique(shifted), fb)[:30000]
+    d = bulk_load(fb, sample_stride=4)
+    h0 = d.stats()["avg_height"]
+    t0 = _t.perf_counter()
+    for j, k in enumerate(shifted):
+        d.insert(float(k), j)
+    dt = (_t.perf_counter() - t0) / len(shifted)
+    s = d.stats()
+    csv_row("fig10,fb<-logn,insert_us", dt * 1e6,
+            f"avg_h:{h0:.2f}->{s['avg_height']:.2f};adj={s['adjustments']}")
+
+
+def kernel_bench():
+    """Pallas kernel (interpret) vs pure-XLA batched search + bytes/query."""
+    print("# kernel: dili_search")
+    from repro.kernels import ops as K
+    from repro.core import search as S2
+    name = DATASETS[0]
+    keys = dataset(name)[:200000]
+    d, keys32 = K.build_f32_index(keys)
+    f = flatten(d)
+    arrs = K.kernel_arrays(f)
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(keys32[rng.integers(0, len(keys32), 16384)], jnp.float32)
+    t = time_fn(lambda q: K.dili_search(arrs, q), q)
+    csv_row("kernel,pallas_interpret", t / 16384 * 1e9,
+            f"table_bytes={K.table_bytes(arrs)}")
+    idx = K._as_search_idx(arrs)
+    t2 = time_fn(lambda q: S2.search_batch(idx, q, max_depth=f.max_depth + 2),
+                 q)
+    csv_row("kernel,xla_f32", t2 / 16384 * 1e9)
+    # roofline: bytes/query on the device path (node+slot rows touched)
+    v, fnd, nodes, probes = S2.search_batch(idx, q,
+                                            max_depth=f.max_depth + 2,
+                                            with_stats=True)
+    node_row, slot_row = 17, 9      # f32 snapshot row sizes
+    bpq = float(np.asarray(nodes).mean()) * node_row \
+        + float(np.asarray(probes).mean()) * slot_row
+    csv_row("kernel,bytes_per_query", bpq,
+            "v5e HBM roofline: 819e9/bytes_per_query lookups/s/chip")
+
+
+ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
+       fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
+       table10_12_13_appendix, fig9_scale, fig10_shift, kernel_bench]
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""End-to-end training driver: a ~100M-param granite-style model trained for
+a few hundred steps on the DILI-backed record-store pipeline, with
+checkpoint/auto-resume and simulated node failure.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --fail-at-step 60
+    # rerun the same command: it auto-resumes from the last checkpoint
+
+Scaled by --preset: `cpu` (default, CPU-friendly dims) or `100m` (the full
+~100M-param config; same code path).
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import StorePipeline, SyntheticLM
+from repro.data.record_store import RecordStore
+from repro.ft import checkpoint as CKPT
+from repro.models import model as MDL
+from repro.train import step as STEP
+from repro.train.optim import adamw, cosine_schedule
+
+
+def build_cfg(preset: str):
+    base = get_config("granite-8b")
+    if preset == "100m":
+        return dataclasses.replace(
+            base, name="granite-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_ff=2048, vocab=32768, head_dim=64,
+            dtype="float32", remat="none")
+    return dataclasses.replace(
+        base, name="granite-tiny", n_layers=4, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, head_dim=64, dtype="float32",
+        remat="none")
+
+
+def build_store(cfg, n_docs=2000, doc_len=129, seed=0):
+    """Corpus in a DILI record store; documents carry the synthetic
+    next-token structure so the model demonstrably learns."""
+    gen = SyntheticLM(cfg.vocab, doc_len - 1, 1, seed=seed)
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.uniform(0, 1e9, n_docs))
+    docs = []
+    for i in range(len(keys)):
+        b = gen.batch_at(i)
+        docs.append(np.concatenate([b["tokens"][0], b["labels"][0][-1:]])
+                    .astype(np.int32))
+    return RecordStore(keys, docs), keys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--preset", default="cpu")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at-step", type=int, default=0,
+                    help="simulate a node failure at this step")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    opt = adamw(lr=3e-3, schedule=cosine_schedule(3e-3, 20, args.steps))
+    store, keys = build_store(cfg)
+    pipe = StorePipeline(store, keys, seq_len=args.seq, batch=args.batch)
+
+    template = jax.eval_shape(
+        lambda: STEP.init_state(jax.random.PRNGKey(0), cfg, opt))
+    state, manifest = CKPT.restore(args.ckpt_dir, template)
+    if state is None:
+        state = STEP.init_state(jax.random.PRNGKey(0), cfg, opt)
+        start = 0
+        print("[train] cold start")
+    else:
+        start = manifest["step"]
+        print(f"[train] resumed from step {start}")
+
+    train_step = jax.jit(STEP.make_train_step(cfg, opt), donate_argnums=0)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        if args.fail_at_step and step == args.fail_at_step:
+            print(f"[train] SIMULATED NODE FAILURE at step {step} — "
+                  "rerun to auto-resume")
+            sys.exit(42)
+        batch = pipe.batch_at(step)      # DILI-backed lookup path
+        state, metrics = train_step(state, {k: jnp.asarray(v)
+                                            for k, v in batch.items()})
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({(time.time() - t0):.0f}s)")
+        if (step + 1) % args.ckpt_every == 0:
+            CKPT.save(args.ckpt_dir, step + 1, state,
+                      extra={"data_step": step + 1})
+    print("[train] done; final loss should be well below the ~ "
+          f"{np.log(cfg.vocab):.2f} random-guess floor")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16 — Mamba-1 architecture [arXiv:2410.05355; unverified]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab=65024, ssm_state=16, ssm_version=1, expand=2, d_conv=4,
+    tie_embeddings=False,
+)

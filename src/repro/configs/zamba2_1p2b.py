@@ -1,0 +1,12 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000,
+ssm_state=64 — Mamba-2 backbone + shared attention blocks
+[arXiv:2411.15242; hf].  The shared transformer block is applied every 6
+Mamba-2 blocks with one shared set of weights (per-site KV caches)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, ssm_state=64, ssm_version=2, ssm_heads=32, expand=2,
+    d_conv=4, shared_attn_every=6, act="gelu",
+)

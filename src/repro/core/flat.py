@@ -1,0 +1,198 @@
+"""Flattening: host DILI -> immutable structure-of-arrays device snapshot.
+
+TPU-native layout (DESIGN.md section 2): the whole tree becomes three parallel
+tables so traversal is a chain of `gather; fma; floor; clamp` — no pointers.
+
+Node table (one row per internal OR leaf node):
+    a, b      : linear model (key -> slot offset), float
+    base      : first slot of this node in the slot table, int32
+    fo        : number of slots, int32
+    dense     : 1 if this is a DILI-LO dense leaf (exponential-search exit)
+
+Slot table (one row per slot of every node, concatenated):
+    tag       : 0 = EMPTY, 1 = PAIR, 2 = CHILD
+    key       : pair key (valid when tag == PAIR)
+    val       : pair payload (tag == PAIR) or child node id (tag == CHILD)
+
+Internal nodes are just nodes whose slots are all CHILD — search over the
+whole tree (Alg. 6) collapses into ONE loop (search.py).
+
+A sorted *delta overlay* (LSM-style) absorbs freshly inserted keys between
+snapshot publishes; `merge_overlay` folds it back through the host structure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .dili import DILI, Internal, Leaf
+
+TAG_EMPTY, TAG_PAIR, TAG_CHILD = 0, 1, 2
+
+
+@dataclass
+class FlatDILI:
+    # node table
+    a: np.ndarray        # f64 [n_nodes]
+    b: np.ndarray        # f64 [n_nodes]
+    base: np.ndarray     # i32 [n_nodes]
+    fo: np.ndarray       # i32 [n_nodes]
+    dense: np.ndarray    # i8  [n_nodes]
+    # slot table
+    tag: np.ndarray      # i8  [n_slots]
+    key: np.ndarray      # f64 [n_slots]
+    val: np.ndarray      # i64 [n_slots]
+    root: int
+    max_depth: int
+    key_lo: float
+    key_hi: float
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.a)
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.tag)
+
+    def nbytes(self) -> int:
+        return sum(x.nbytes for x in
+                   (self.a, self.b, self.base, self.fo, self.dense,
+                    self.tag, self.key, self.val))
+
+    def astype(self, dtype) -> "FlatDILI":
+        """Cast key/model dtype (f32 for the Pallas TPU kernel path)."""
+        return FlatDILI(self.a.astype(dtype), self.b.astype(dtype),
+                        self.base, self.fo, self.dense, self.tag,
+                        self.key.astype(dtype), self.val, self.root,
+                        self.max_depth, self.key_lo, self.key_hi)
+
+
+def flatten(dili: DILI) -> FlatDILI:
+    """BFS over the host tree, assigning node ids and slot ranges."""
+    nodes: list = []
+    stack = [dili.root]
+    ids: dict[int, int] = {}
+    # BFS so parents get smaller ids than children (nice for cache locality of
+    # the hot top levels when the table is VMEM-tiled).
+    from collections import deque
+    q = deque([dili.root])
+    while q:
+        nd = q.popleft()
+        ids[id(nd)] = len(nodes)
+        nodes.append(nd)
+        if isinstance(nd, Internal):
+            for c in nd.children:
+                q.append(c)
+        else:
+            for s in nd.slots:
+                if isinstance(s, Leaf):
+                    q.append(s)
+
+    n_nodes = len(nodes)
+    a = np.zeros(n_nodes)
+    b = np.zeros(n_nodes)
+    base = np.zeros(n_nodes, np.int32)
+    fo = np.zeros(n_nodes, np.int32)
+    dense = np.zeros(n_nodes, np.int8)
+
+    tags: list[np.ndarray] = []
+    keys: list[np.ndarray] = []
+    vals: list[np.ndarray] = []
+    cursor = 0
+    for i, nd in enumerate(nodes):
+        if isinstance(nd, Internal):
+            m = nd.fanout
+            a[i], b[i], base[i], fo[i] = nd.a, nd.b, cursor, m
+            tags.append(np.full(m, TAG_CHILD, np.int8))
+            keys.append(np.zeros(m))
+            vals.append(np.array([ids[id(c)] for c in nd.children], np.int64))
+            cursor += m
+        else:
+            m = max(nd.fo, 1)
+            a[i], b[i], base[i], fo[i] = nd.a, nd.b, cursor, m
+            dense[i] = 1 if nd.dense else 0
+            t = np.zeros(m, np.int8)
+            k = np.zeros(m)
+            v = np.zeros(m, np.int64)
+            for j, s in enumerate(nd.slots[:m]):
+                if s is None:
+                    continue
+                if isinstance(s, Leaf):
+                    t[j] = TAG_CHILD
+                    v[j] = ids[id(s)]
+                else:
+                    t[j] = TAG_PAIR
+                    k[j] = s[0]
+                    v[j] = s[1]
+            tags.append(t)
+            keys.append(k)
+            vals.append(v)
+            cursor += m
+
+    depth = _max_depth(dili.root)
+    st = dili.root
+    return FlatDILI(
+        a=a, b=b, base=base, fo=fo, dense=dense,
+        tag=np.concatenate(tags) if tags else np.zeros(0, np.int8),
+        key=np.concatenate(keys) if keys else np.zeros(0),
+        val=np.concatenate(vals) if vals else np.zeros(0, np.int64),
+        root=ids[id(dili.root)], max_depth=depth,
+        key_lo=float(st.lb), key_hi=float(st.ub),
+    )
+
+
+def _max_depth(root) -> int:
+    best = 1
+    stack = [(root, 1)]
+    while stack:
+        nd, d = stack.pop()
+        best = max(best, d)
+        if isinstance(nd, Internal):
+            for c in nd.children:
+                stack.append((c, d + 1))
+        else:
+            for s in nd.slots:
+                if isinstance(s, Leaf):
+                    stack.append((s, d + 1))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Delta overlay: sorted buffer for inserts between snapshot publishes
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DeltaOverlay:
+    keys: np.ndarray     # f64 [cap], padded with +inf
+    vals: np.ndarray     # i64 [cap]
+    count: int
+    cap: int
+
+    @staticmethod
+    def empty(cap: int = 65536) -> "DeltaOverlay":
+        return DeltaOverlay(np.full(cap, np.inf), np.zeros(cap, np.int64), 0, cap)
+
+    def insert_batch(self, k: np.ndarray, v: np.ndarray) -> "DeltaOverlay":
+        nk = np.concatenate([self.keys[: self.count], np.asarray(k, np.float64)])
+        nv = np.concatenate([self.vals[: self.count], np.asarray(v, np.int64)])
+        order = np.argsort(nk, kind="stable")
+        nk, nv = nk[order], nv[order]
+        # dedupe, keep last write
+        keep = np.append(np.diff(nk) != 0, True)
+        nk, nv = nk[keep], nv[keep]
+        cap = self.cap
+        while len(nk) > cap:
+            cap *= 2
+        keys = np.full(cap, np.inf)
+        vals = np.zeros(cap, np.int64)
+        keys[: len(nk)] = nk
+        vals[: len(nk)] = nv
+        return DeltaOverlay(keys, vals, len(nk), cap)
+
+    @property
+    def full_fraction(self) -> float:
+        return self.count / max(self.cap, 1)

@@ -1,0 +1,251 @@
+"""Batched device-side DILI search (pure JAX reference path).
+
+Level-synchronous traversal: a batch of Q queries advances together through
+the unified node/slot tables (flat.py).  Each round costs one FMA + floor +
+clamp + two gathers per query — the TPU adaptation of Algorithm 6's pointer
+chase.  Dense (DILI-LO) leaves exit the loop and run the paper's exponential
+search (Algorithm 1) as a bounded vectorized probe sequence.
+
+All functions take the snapshot as a dict of jnp arrays (see `device_arrays`)
+so they can be jitted/donated and fed to shard_map without re-tracing on every
+publish (shapes are padded to powers of two).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flat import TAG_CHILD, TAG_EMPTY, TAG_PAIR, DeltaOverlay, FlatDILI
+
+def predict_slot(a, b, q, fo):
+    """floor(a + b*q) clipped to [0, fo).
+
+    CRITICAL: XLA fuses `a + b*q` into an FMA whose single rounding differs
+    from numpy's mul-then-add at exact-integer boundaries (e.g. 2.0 vs
+    1.999...), sending a query to the wrong slot.  Construction places pairs
+    with numpy semantics, so the search MUST evaluate mul-then-add with two
+    IEEE roundings — the optimization_barrier blocks the FMA fusion.
+    (Found the hard way; regression test: tests/test_search.py::test_fma_consistency.)
+    """
+    bq = jax.lax.optimization_barrier(b * q)
+    return jnp.clip(jnp.floor(a + bq).astype(jnp.int32), 0, fo - 1)
+
+
+def _pad_pow2(x: np.ndarray, fill) -> np.ndarray:
+    n = len(x)
+    m = 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+    if m == n:
+        return x
+    out = np.full(m, fill, dtype=x.dtype)
+    out[:n] = x
+    return out
+
+
+def device_arrays(flat: FlatDILI, dtype=jnp.float64, pad: bool = True) -> dict:
+    """Upload the snapshot; pads table lengths to powers of two so republishes
+    reuse the compiled search executable."""
+    f = flat
+    ap, bp = (np.asarray(f.a), np.asarray(f.b))
+    conv = (lambda x, fill: _pad_pow2(x, fill)) if pad else (lambda x, fill: x)
+    return dict(
+        a=jnp.asarray(conv(ap, 0.0), dtype),
+        b=jnp.asarray(conv(bp, 0.0), dtype),
+        base=jnp.asarray(conv(f.base, 0), jnp.int32),
+        fo=jnp.asarray(conv(f.fo, 1), jnp.int32),
+        dense=jnp.asarray(conv(f.dense, 0), jnp.int8),
+        tag=jnp.asarray(conv(f.tag, TAG_EMPTY), jnp.int8),
+        key=jnp.asarray(conv(f.key, 0.0), dtype),
+        val=jnp.asarray(conv(f.val, -1), jnp.int32),
+        root=jnp.int32(f.root),
+        max_depth=jnp.int32(f.max_depth),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Unified traversal (Algorithm 6 batched)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "with_stats"))
+def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int = 24,
+                 with_stats: bool = False):
+    """Point lookups. Returns (values, found) — values only valid where found.
+
+    with_stats additionally returns (nodes_visited, slot_probes) per query —
+    the Table-5 cache-miss proxy (each node visit + slot probe = one
+    HBM/cache-line touch in the paper's cost model).
+    """
+    q = queries
+    # derive carries from q so their varying-manual-axes match inside
+    # shard_map bodies (constants would be vma-unvarying and break scan)
+    zi = (q * 0).astype(jnp.int32)
+    zb = zi > 0
+    n0 = zi + idx["root"]
+
+    def body(state, _):
+        n, done, val, found, nodes, probes = state
+        a = idx["a"][n]
+        b = idx["b"][n]
+        fo = idx["fo"][n]
+        is_dense = idx["dense"][n] > 0
+        pos = predict_slot(a, b, q, fo)
+        s = idx["base"][n] + pos
+        t = idx["tag"][s]
+        sk = idx["key"][s]
+        sv = idx["val"][s]
+        step_active = ~done & ~is_dense
+        is_child = (t == TAG_CHILD) & step_active
+        hit = (t == TAG_PAIR) & (sk == q) & step_active
+        miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & step_active
+        val = jnp.where(hit, sv, val)
+        found = found | hit
+        n = jnp.where(is_child, sv, n)
+        done = done | hit | miss | (is_dense & ~done)
+        nodes = nodes + step_active.astype(jnp.int32)
+        probes = probes + step_active.astype(jnp.int32)
+        return (n, done, val, found, nodes, probes), None
+
+    init = (n0, zb, zi - 1, zb, zi, zi)
+    (n, done, val, found, nodes, probes), _ = jax.lax.scan(
+        body, init, None, length=max_depth)
+
+    # dense-leaf exit: exponential + binary search (Algorithm 1 lines 2-5)
+    is_dense = idx["dense"][n] > 0
+    dval, dfound, dprobes = _dense_search(idx, q, n)
+    val = jnp.where(is_dense & dfound, dval, val)
+    found = found | (is_dense & dfound)
+    nodes = nodes + is_dense.astype(jnp.int32)
+    probes = probes + jnp.where(is_dense, dprobes, 0)
+    if with_stats:
+        return val, found, nodes, probes
+    return val, found
+
+
+def _dense_search(idx: dict, q: jnp.ndarray, n: jnp.ndarray):
+    """Vectorized exponential search around the model prediction inside a
+    dense leaf [base, base+fo).  Fixed trip counts (14 doubling + 14 binary
+    halving cover fo <= 2^14 = 16384 > 2*omega)."""
+    a = idx["a"][n]
+    b = idx["b"][n]
+    fo = idx["fo"][n]
+    base = idx["base"][n]
+    m1 = jnp.maximum(fo - 1, 0)
+    pred = jnp.clip(predict_slot(a, b, q, fo), 0, m1)
+
+    def key_at(i):
+        return idx["key"][base + jnp.clip(i, 0, m1)]
+
+    kp = key_at(pred)
+    zi = pred * 0
+    probes = zi + 1
+
+    # --- exponential phase: grow a distance bound B until it brackets q ----
+    going_up = kp < q
+
+    def exp_body(state, _):
+        bound, done, probes = state
+        up_i = jnp.clip(pred + bound, 0, m1)
+        dn_i = jnp.clip(pred - bound, 0, m1)
+        need_up = going_up & ~done & (key_at(up_i) < q) & (pred + bound < m1)
+        need_dn = ~going_up & ~done & (key_at(dn_i) > q) & (pred - bound > 0)
+        probes = probes + (~done).astype(jnp.int32)
+        done = done | ~(need_up | need_dn)
+        bound = jnp.where(done, bound, bound * 2)
+        return (bound, done, probes), None
+
+    (bound, _, probes), _ = jax.lax.scan(
+        exp_body, (zi + 1, zi > 0, probes), None, length=16)
+
+    # bracket [lo, hi] guaranteed to contain the lower bound of q
+    lo = jnp.where(going_up, pred, jnp.maximum(pred - bound, 0))
+    hi = jnp.where(going_up, jnp.minimum(pred + bound, m1), pred)
+
+    # --- binary phase: first index with key >= q ---------------------------
+    def bin_body(state, _):
+        lo, hi, probes = state
+        mid = (lo + hi) // 2
+        go = lo < hi
+        below = key_at(mid) < q
+        lo = jnp.where(go & below, mid + 1, lo)
+        hi = jnp.where(go & ~below, mid, hi)
+        probes = probes + go.astype(jnp.int32)
+        return (lo, hi, probes), None
+
+    (lo, hi, probes), _ = jax.lax.scan(bin_body, (lo, hi, probes), None,
+                                       length=16)
+    s = base + jnp.clip(lo, 0, m1)
+    ok = (idx["tag"][s] == TAG_PAIR) & (idx["key"][s] == q)
+    return idx["val"][s], ok, probes
+
+
+# ---------------------------------------------------------------------------
+# Overlay lookup + combined search
+# ---------------------------------------------------------------------------
+
+
+def overlay_arrays(ov: DeltaOverlay, dtype=jnp.float64) -> dict:
+    return dict(keys=jnp.asarray(ov.keys, dtype),
+                vals=jnp.asarray(ov.vals, jnp.int32))
+
+
+@jax.jit
+def overlay_lookup(ov: dict, queries: jnp.ndarray):
+    i = jnp.searchsorted(ov["keys"], queries)
+    i = jnp.clip(i, 0, len(ov["keys"]) - 1)
+    found = ov["keys"][i] == queries
+    return ov["vals"][i], found
+
+
+def search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
+                        max_depth: int = 24):
+    """Overlay (recent writes) wins over the snapshot."""
+    v0, f0 = search_batch(idx, queries, max_depth)
+    v1, f1 = overlay_lookup(ov, queries)
+    return jnp.where(f1, v1, v0), f0 | f1
+
+
+# ---------------------------------------------------------------------------
+# Range query: locate both endpoints, then mask-scan the slot table
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_hits", "max_depth"))
+def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
+                      max_hits: int = 128, max_depth: int = 24):
+    """For each (lo, hi): gather up to max_hits pair keys in [lo, hi).
+
+    DILI's entry arrays are not densely packed (Fig. 6b discussion), so a scan
+    must skip EMPTY/CHILD slots; we vectorize by scanning the *global* slot
+    table window around the leaf holding `lo` — leaves are laid out in BFS
+    order so siblings are contiguous (flat.py).
+    """
+    tag = idx["tag"]
+    key = idx["key"]
+
+    in_range = (tag == TAG_PAIR)
+
+    def one(lo1, hi1):
+        sel = in_range & (key >= lo1) & (key < hi1)
+        # top-k by position: compress indices of selected slots
+        idxs = jnp.nonzero(sel, size=max_hits, fill_value=-1)[0]
+        ks = jnp.where(idxs >= 0, key[jnp.clip(idxs, 0, None)], jnp.inf)
+        vs = jnp.where(idxs >= 0, idx["val"][jnp.clip(idxs, 0, None)], -1)
+        order = jnp.argsort(ks)
+        return ks[order], vs[order], (idxs >= 0).sum()
+
+    return jax.vmap(one)(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Convenience host wrapper
+# ---------------------------------------------------------------------------
+
+
+def lookup_np(idx: dict, queries: np.ndarray, max_depth: int = 24):
+    v, f = search_batch(idx, jnp.asarray(queries), max_depth)
+    return np.asarray(v), np.asarray(f)

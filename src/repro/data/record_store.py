@@ -1,0 +1,72 @@
+"""DILI-indexed record store: the training data pipeline's random-access path.
+
+Variable-length records (token sequences) are stored in one flat token arena.
+The DILI maps document key -> doc ordinal (int32-safe for the TPU kernel
+path); a sidecar table maps ordinal -> (offset, length).  Batched `lookup`
+runs the device-side batched search (core/search.py) — the paper's technique
+IS the pipeline's index.  New documents go through DILI's Algorithm-7 insert
++ snapshot republish.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import search as S
+from ..core.dili import DILI, bulk_load
+from ..core.flat import flatten
+
+
+class RecordStore:
+    def __init__(self, doc_keys: np.ndarray, docs: list[np.ndarray],
+                 sample_stride: int = 4):
+        order = np.argsort(doc_keys)
+        doc_keys = np.asarray(doc_keys, np.float64)[order]
+        docs = [np.asarray(docs[i], np.int32) for i in order]
+        self.arena = (np.concatenate(docs) if docs
+                      else np.zeros(0, np.int32))
+        lens = np.array([len(d) for d in docs], np.int64)
+        self.offsets = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        self.lengths = lens
+        ordinals = np.arange(len(docs), dtype=np.int64)
+        self.dili: DILI = bulk_load(doc_keys, ordinals,
+                                    sample_stride=sample_stride)
+        self._republish()
+
+    def _republish(self):
+        self.flat = flatten(self.dili)
+        self.idx = S.device_arrays(self.flat)
+
+    # -- write path ---------------------------------------------------------
+
+    def add(self, key: float, tokens: np.ndarray) -> None:
+        self.offsets = np.append(self.offsets, len(self.arena))
+        self.lengths = np.append(self.lengths, len(tokens))
+        self.arena = np.concatenate([self.arena,
+                                     np.asarray(tokens, np.int32)])
+        self.dili.insert(float(key), len(self.offsets) - 1)
+
+    def publish(self) -> None:
+        """Make writes visible to the device reader (snapshot swap)."""
+        self._republish()
+
+    # -- read path ----------------------------------------------------------
+
+    def lookup(self, keys) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched: returns (offsets, lengths, found)."""
+        v, f = S.search_batch(self.idx, jnp.asarray(keys, jnp.float64),
+                              max_depth=self.flat.max_depth + 2)
+        v = np.asarray(v).astype(np.int64)
+        f = np.asarray(f)
+        ords = np.where(f, v, 0)
+        return self.offsets[ords], self.lengths[ords], f
+
+    def fetch(self, key: float, pad_to: int = 0) -> np.ndarray | None:
+        off, ln, f = self.lookup(np.array([key]))
+        if not f[0]:
+            return None
+        seq = self.arena[off[0]: off[0] + ln[0]]
+        if pad_to and len(seq) < pad_to:
+            seq = np.pad(seq, (0, pad_to - len(seq)))
+        return seq

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: batched DILI point lookup (the paper's hot loop).
+
+TPU adaptation of Algorithm 6 (DESIGN.md section 2): queries are tiled into
+VMEM blocks of BLOCK_Q; the node table and slot table are small relative to
+the key count (two f32 + three i32 words per node, ~2.5 words per slot) and
+are kept fully VMEM-resident per grid step — for a 1M-key index the tables
+are ~12 MB < 16 MB VMEM on v5e.  Larger indexes use the sharded/XLA path
+(ops.py dispatches).
+
+The traversal is a fixed-trip fori_loop (max_depth from the snapshot, a
+static bound: DILI's adjustment strategy bounds tree height, Table 6).  Each
+trip is FMA + floor + clamp + two VMEM gathers per lane — entirely VPU work;
+there is no MXU component, the kernel is gather-bandwidth-bound, which is the
+TPU analogue of the paper's cache-miss economy.
+
+Dense (DILI-LO) leaves and depth overflow set a `needs_fallback` flag; the
+jit wrapper re-checks those lanes with the pure-XLA path (rare by
+construction: local optimization removes dense leaves).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TAG_EMPTY, TAG_PAIR, TAG_CHILD = 0, 1, 2
+
+BLOCK_Q = 2048   # 16 sublanes x 128 lanes of f32
+
+
+def _kernel(a_ref, b_ref, base_ref, fo_ref, dense_ref, tag_ref, key_ref,
+            val_ref, root_ref, q_ref, out_ref, found_ref, fb_ref, *,
+            max_depth: int):
+    q = q_ref[...]
+    a_t = a_ref[...]
+    b_t = b_ref[...]
+    base_t = base_ref[...]
+    fo_t = fo_ref[...]
+    dense_t = dense_ref[...]
+    tag_t = tag_ref[...]
+    key_t = key_ref[...]
+    val_t = val_ref[...]
+    root = root_ref[0]
+
+    zi = jnp.zeros(q.shape, jnp.int32)
+    state = (zi + root,          # current node id
+             zi > 0,             # done
+             zi - 1,             # out value
+             zi > 0,             # found
+             zi > 0)             # needs fallback
+
+    def body(_, state):
+        n, done, out, found, fb = state
+        an = jnp.take(a_t, n, axis=0)
+        bn = jnp.take(b_t, n, axis=0)
+        fon = jnp.take(fo_t, n, axis=0)
+        is_dense = jnp.take(dense_t, n, axis=0) > 0
+        pos = jnp.clip(jnp.floor(an + bn * q).astype(jnp.int32), 0, fon - 1)
+        s = jnp.take(base_t, n, axis=0) + pos
+        t = jnp.take(tag_t, s, axis=0)
+        sk = jnp.take(key_t, s, axis=0)
+        sv = jnp.take(val_t, s, axis=0)
+        active = ~done & ~is_dense
+        is_child = (t == TAG_CHILD) & active
+        hit = (t == TAG_PAIR) & (sk == q) & active
+        miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & active
+        out = jnp.where(hit, sv, out)
+        found = found | hit
+        fb = fb | (is_dense & ~done)
+        n = jnp.where(is_child, sv, n)
+        done = done | hit | miss | (is_dense & ~done)
+        return (n, done, out, found, fb)
+
+    n, done, out, found, fb = jax.lax.fori_loop(0, max_depth, body, state)
+    out_ref[...] = out
+    found_ref[...] = found
+    fb_ref[...] = fb | ~done
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_depth", "interpret", "block_q"))
+def dili_search_pallas(a, b, base, fo, dense, tag, key, val, root, queries,
+                       max_depth: int, interpret: bool = True,
+                       block_q: int = BLOCK_Q):
+    """pallas_call wrapper.  Tables are replicated to every grid step (full
+    blocks, index_map -> 0); only the query batch is tiled."""
+    nq = queries.shape[0]
+    assert nq % block_q == 0, f"pad queries to a multiple of {block_q}"
+    grid = (nq // block_q,)
+
+    n_nodes = a.shape[0]
+    n_slots = tag.shape[0]
+
+    def full(shape):
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    qspec = pl.BlockSpec((block_q,), lambda i: (i,))
+
+    out, found, fb = pl.pallas_call(
+        functools.partial(_kernel, max_depth=max_depth),
+        grid=grid,
+        in_specs=[full((n_nodes,))] * 5 + [full((n_slots,))] * 3
+                 + [full((1,)), qspec],
+        out_specs=[qspec, qspec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq,), jnp.bool_),
+            jax.ShapeDtypeStruct((nq,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(a, b, base, fo, dense, tag, key, val, root, queries)
+    return out, found, fb

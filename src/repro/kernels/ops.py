@@ -1,0 +1,91 @@
+"""jit'd public wrapper for the DILI search kernel.
+
+Dispatch policy:
+  * tables fit the VMEM budget -> Pallas kernel (interpret=True on CPU,
+    compiled on real TPU), with an XLA fallback pass for lanes flagged
+    needs_fallback (dense leaves / depth overflow);
+  * otherwise -> the pure-XLA batched path (core/search.py), which keeps
+    tables in HBM and lets XLA schedule the gathers.
+
+Keys are f32 on this path; the snapshot must have been built under
+``placement_dtype(np.float32)`` so construction and kernel arithmetic agree
+(see core/dili.py).  build_f32_index() below does exactly that.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import search as core_search
+from ..core.dili import bulk_load, placement_dtype
+from ..core.flat import FlatDILI, flatten
+from .dili_search import BLOCK_Q, dili_search_pallas
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def build_f32_index(keys: np.ndarray, vals: np.ndarray | None = None, **kw):
+    """Bulk-load a DILI whose placement arithmetic is exactly float32."""
+    keys32 = np.unique(np.asarray(keys, np.float64).astype(np.float32))
+    if vals is None:
+        vals = np.arange(len(keys32), dtype=np.int64)
+    with placement_dtype(np.float32):
+        d = bulk_load(keys32.astype(np.float64), vals, **kw)
+    return d, keys32
+
+
+def kernel_arrays(flat: FlatDILI) -> dict:
+    """Device arrays in kernel dtypes (f32 keys/models, i32 the rest)."""
+    return dict(
+        a=jnp.asarray(flat.a, jnp.float32),
+        b=jnp.asarray(flat.b, jnp.float32),
+        base=jnp.asarray(flat.base, jnp.int32),
+        fo=jnp.asarray(flat.fo, jnp.int32),
+        dense=jnp.asarray(flat.dense.astype(np.int32)),
+        tag=jnp.asarray(flat.tag.astype(np.int32)),
+        key=jnp.asarray(flat.key, jnp.float32),
+        val=jnp.asarray(flat.val, jnp.int32),
+        root=jnp.asarray([flat.root], jnp.int32),
+        max_depth=flat.max_depth,
+    )
+
+
+def table_bytes(arrs: dict) -> int:
+    return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+               for k, v in arrs.items() if hasattr(v, "dtype"))
+
+
+def dili_search(arrs: dict, queries: jnp.ndarray, interpret: bool = True):
+    """Batched lookup via the Pallas kernel with XLA fallback lanes."""
+    max_depth = int(arrs["max_depth"])
+    nq = queries.shape[0]
+    pad = (-nq) % BLOCK_Q
+    qp = jnp.pad(queries, (0, pad), constant_values=jnp.inf)
+
+    if table_bytes(arrs) <= VMEM_BUDGET_BYTES:
+        out, found, fb = dili_search_pallas(
+            arrs["a"], arrs["b"], arrs["base"], arrs["fo"], arrs["dense"],
+            arrs["tag"], arrs["key"], arrs["val"], arrs["root"], qp,
+            max_depth=max_depth, interpret=interpret)
+        if bool(jnp.any(fb)):
+            # rare path: dense leaves / overflow — recheck those lanes in XLA
+            idx = _as_search_idx(arrs)
+            v2, f2 = core_search.search_batch(idx, qp,
+                                              max_depth=max_depth + 18)
+            out = jnp.where(fb, v2, out)
+            found = jnp.where(fb, f2, found)
+        return out[:nq], found[:nq]
+
+    idx = _as_search_idx(arrs)
+    v, f = core_search.search_batch(idx, qp, max_depth=max_depth + 2)
+    return v[:nq], f[:nq]
+
+
+def _as_search_idx(arrs: dict) -> dict:
+    return dict(a=arrs["a"], b=arrs["b"], base=arrs["base"], fo=arrs["fo"],
+                dense=arrs["dense"].astype(jnp.int8),
+                tag=arrs["tag"].astype(jnp.int8), key=arrs["key"],
+                val=arrs["val"], root=arrs["root"][0],
+                max_depth=arrs["max_depth"])

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Pallas dili_search kernel.
+
+Mirrors the kernel semantics exactly: f32 keys/models, mul-then-add slot
+prediction, fixed `max_depth` unrolled traversal, no dense-leaf handling
+(dense lanes are flagged for the wrapper's XLA fallback — see ops.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TAG_EMPTY, TAG_PAIR, TAG_CHILD = 0, 1, 2
+
+
+def dili_search_ref(a, b, base, fo, dense, tag, key, val, root, queries,
+                    max_depth: int):
+    """Returns (vals, found, needs_fallback) for a batch of queries."""
+    q = queries
+    zi = (q * 0).astype(jnp.int32)
+    n = zi + root
+    done = zi > 0
+    out = zi - 1
+    found = zi > 0
+    fallback = zi > 0
+
+    for _ in range(max_depth):
+        an = a[n]
+        bn = b[n]
+        fon = fo[n]
+        is_dense = dense[n] > 0
+        pos = jnp.clip(jnp.floor(an + bn * q).astype(jnp.int32), 0, fon - 1)
+        s = base[n] + pos
+        t = tag[s]
+        sk = key[s]
+        sv = val[s]
+        active = ~done & ~is_dense
+        is_child = (t == TAG_CHILD) & active
+        hit = (t == TAG_PAIR) & (sk == q) & active
+        miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & active
+        out = jnp.where(hit, sv, out)
+        found = found | hit
+        fallback = fallback | (is_dense & ~done)
+        n = jnp.where(is_child, sv, n)
+        done = done | hit | miss | (is_dense & ~done)
+
+    fallback = fallback | ~done   # ran out of depth: let the wrapper recheck
+    return out, found, fallback

@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the cell fits HBM,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * per-collective traffic parsed from the post-SPMD HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute) with ring-traffic formulas per chip.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, list_archs
+from ..models.config import ALL_SHAPES, ModelConfig, ShapeConfig
+from ..parallel import sharding as SH
+from ..train import step as STEP
+from ..train.optim import get_optimizer
+from . import specs as SPECS
+from .mesh import make_production_mesh
+
+# ---------------------------------------------------------------------------
+# cell applicability (DESIGN.md section 4)
+# ---------------------------------------------------------------------------
+
+SUBQUADRATIC = {"ssm", "hybrid"}
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return "long_500k needs sub-quadratic attention (full-attn arch)"
+    return None
+
+
+def pick_optimizer(cfg: ModelConfig) -> str:
+    return "adafactor" if cfg.d_model >= 5120 or cfg.n_experts >= 8 else "adamw"
+
+
+def probe_points(cfg: ModelConfig) -> list[int]:
+    """Layer counts for the roofline probes.  XLA's cost analysis counts a
+    scan body ONCE regardless of trip count (verified), so per-step totals
+    are recovered by linear extrapolation over n_layers:
+      generic:  f(L) = f1 + (L-1)(f2-f1)            probes [1, 2]
+      gemma2:   per-pair (local+global)             probes [2, 4]
+      zamba2:   f(L) = a + b*L + c*sites(L)         probes [6, 7, 12]
+    """
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        return [k, k + 1, 2 * k]
+    if cfg.attn_type == "local_global":
+        return [2, 4]
+    return [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*) = \(?([a-z0-9]+)\[([0-9,]*)\][^)]*\)? "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*")
+_GROUP_RE = re.compile(r"replica_groups=\{?\[?(\d+),(\d+)\]?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-chip traffic estimates from post-SPMD HLO (shapes are
+    per-partition).  Ring formulas: AR=2*S*(g-1)/g, AG/RS/A2A=S*(g-1)/g,
+    CP=S."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts: dict = {}
+    for m in _COLL_RE.finditer(hlo):
+        _, dtype, dims, op = m.groups()
+        size = _shape_bytes(dtype, dims)
+        g = 0
+        gm = _GROUP_RE.search(m.group(0))
+        if gm:
+            a, b = int(gm.group(1)), int(gm.group(2))
+            g = max(a, b) if min(a, b) in (0, 1) else b
+        g = g or 8
+        if op == "all-reduce":
+            traffic = 2 * size * (g - 1) / g
+        elif op == "collective-permute":
+            traffic = size
+        elif op == "all-gather":
+            # HLO shape for all-gather is the OUTPUT (gathered) shape
+            traffic = size * (g - 1) / g
+        else:
+            traffic = size * (g - 1) / g
+        out[op] += traffic
+        counts[op] = counts.get(op, 0) + 1
+    out["counts"] = counts
+    out["total_bytes"] = sum(v for k, v in out.items()
+                             if isinstance(v, float))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(kind, cfg, shape, mesh, spec_tree):
+    dp = SH.dp_axes(mesh)
+
+    def batch_shard(tree):
+        def one(path, leaf):
+            nd = len(leaf.shape)
+            lead = (None,) if cfg.accum_steps > 1 and kind == "train" else ()
+            inner = (dp,) + (None,) * (nd - len(lead) - 1)
+            return NamedSharding(mesh, SH.fit_spec(leaf.shape,
+                                                   P(*(lead + inner)), mesh))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    if kind == "train":
+        params_sh = SH.param_shardings(cfg, mesh, spec_tree["state"]["params"])
+        # optimizer states mirror their param's sharding via path matching
+        opt_sh = _opt_shardings(cfg, mesh, spec_tree["state"])
+        state_sh = dict(params=params_sh, opt=opt_sh,
+                        step=NamedSharding(mesh, P()))
+        return (state_sh, batch_shard(spec_tree["batch"])), state_sh
+    params_sh = SH.param_shardings(cfg, mesh, spec_tree["params"])
+    long_ctx = shape.name == "long_500k"
+    cache_sh = SH.cache_shardings(cfg, mesh, spec_tree["cache"], long_ctx)
+    if kind == "prefill":
+        return (params_sh, batch_shard(spec_tree["batch"]), cache_sh), cache_sh
+    tok_sh = NamedSharding(mesh, SH.fit_spec((shape.global_batch, 1),
+                                             P(dp, None), mesh))
+    return (params_sh, tok_sh, cache_sh), cache_sh
+
+
+def _opt_shardings(cfg, mesh, state_spec):
+    """Optimizer-state shardings: mirror the param sharding; factored
+    adafactor rows/cols inherit the matching prefix of the param spec."""
+    params_sh = SH.param_shardings(cfg, mesh, state_spec["params"])
+    flat_p = dict(jax.tree_util.tree_flatten_with_path(state_spec["params"])[0])
+
+    def one(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        # path like ('v'|'mu'|'nu', <param path...>, ['vr'|'vc'|'v'])
+        tail = names[-1]
+        core = [n for n in names if n not in
+                ("v", "mu", "nu", "vr", "vc", "step")]
+        # find matching param spec by path suffix
+        spec = None
+        for ppath, psh in jax.tree_util.tree_flatten_with_path(params_sh)[0]:
+            pnames = [getattr(k, "key", str(k)) for k in ppath]
+            if pnames == core:
+                spec = psh.spec
+                break
+        if spec is None:
+            return NamedSharding(mesh, P())
+        if tail == "vr":        # param spec minus last dim
+            spec = P(*tuple(spec)[:len(leaf.shape)])
+        elif tail == "vc":      # param spec minus second-to-last dim
+            t = tuple(spec)
+            spec = P(*(t[:max(len(leaf.shape) - 1, 0)] + t[-1:])) \
+                if len(t) >= 2 else P()
+        return NamedSharding(mesh, SH.fit_spec(leaf.shape, spec, mesh))
+
+    return dict(
+        **{k: jax.tree_util.tree_map_with_path(one, v)
+           for k, v in state_spec["opt"].items() if k != "step"},
+        step=NamedSharding(mesh, P()))
+
+
+def lower_cell(arch: str, shape: ShapeConfig, multi_pod: bool,
+               overrides: dict | None = None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        return dict(arch=arch, shape=shape.name, mesh="multi" if multi_pod
+                    else "single", status="SKIP", reason=reason)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = SPECS.effective_config(cfg, shape)
+    opt = get_optimizer(pick_optimizer(cfg))
+    spec_tree = SPECS.input_specs(cfg, shape, opt)
+    kind = spec_tree["kind"]
+    in_sh, _ = shardings_for(kind, cfg, shape, mesh, spec_tree)
+
+    if kind == "train":
+        fn = STEP.make_train_step(cfg, opt)
+        args = (spec_tree["state"], spec_tree["batch"])
+        out_sh = (in_sh[0], None)
+    elif kind == "prefill":
+        fn = STEP.make_prefill_step(cfg)
+        args = (spec_tree["params"], spec_tree["batch"], spec_tree["cache"])
+        out_sh = (None, in_sh[2])
+    else:
+        fn = STEP.make_decode_step(cfg)
+        args = (spec_tree["params"], spec_tree["token"], spec_tree["cache"])
+        out_sh = (None, None, in_sh[2])
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    row = dict(
+        arch=arch, shape=shape.name,
+        mesh="multi" if multi_pod else "single",
+        status="OK", kind=kind, hlo_text=hlo,
+        lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collectives=coll,
+        optimizer=pick_optimizer(cfg),
+        accum_steps=cfg.accum_steps,
+    )
+    for attr in ("bytes_accessed", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            row[f"mem_{attr}"] = int(v)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--probes", action="store_true",
+                    help="also lower reduced-layer probes (single-pod) for "
+                         "scan-corrected roofline extrapolation")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. remat=full)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = (ALL_SHAPES if args.shape == "all"
+              else [s for s in ALL_SHAPES if s.name == args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+
+    def run_one(arch, shape, mp, ov, tag_extra=""):
+        nonlocal failures
+        tag = f"{arch}_{shape.name}_{'multi' if mp else 'single'}{tag_extra}"
+        if ov and not tag_extra:
+            tag += "_" + "_".join(f"{k}-{v}" for k, v in sorted(ov.items()))
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                cached = json.load(f)
+            if cached.get("status") != "FAIL":    # retry failures
+                print(f"[skip-cached] {tag}")
+                return cached
+        print(f"[lower] {tag} ...", flush=True)
+        try:
+            row = lower_cell(arch, shape, mp, ov)
+        except Exception as e:
+            traceback.print_exc()
+            row = dict(arch=arch, shape=shape.name,
+                       mesh="multi" if mp else "single",
+                       status="FAIL", error=str(e)[-2000:])
+            failures += 1
+        if ov:
+            row["overrides"] = {k: v for k, v in ov.items()}
+        hlo = row.pop("hlo_text", None)
+        if hlo is not None:
+            import gzip
+            with gzip.open(os.path.join(args.out, tag + ".hlo.gz"),
+                           "wt") as f:
+                f.write(hlo)
+        with open(out_path, "w") as f:
+            json.dump(row, f, indent=1)
+        print(f"[done ] {tag}: {row['status']} "
+              + (f"compile={row.get('compile_s')}s "
+                 f"flops={row.get('flops', 0):.3g}" if
+                 row["status"] == "OK" else
+                 row.get("reason", row.get("error", ""))[:200]),
+              flush=True)
+        return row
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                row = run_one(arch, shape, mp, dict(overrides))
+                if (args.probes and not mp and row.get("status") == "OK"):
+                    cfg = get_config(arch)
+                    for lp in probe_points(cfg):
+                        ov = dict(overrides, n_layers=lp, accum_steps=1)
+                        if cfg.is_encdec:
+                            ov["encoder_layers"] = min(
+                                lp, cfg.encoder_layers)
+                        run_one(arch, shape, False, ov,
+                                tag_extra=f"_probeL{lp}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Serving launcher: prefill/decode engine + DILI session table.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \\
+        --requests 16 --tokens 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import model as MDL
+from ..serve.sessions import SessionTable
+from ..train import step as STEP
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = MDL.init_params(jax.random.PRNGKey(0), cfg)
+    prefill = jax.jit(STEP.make_prefill_step(cfg))
+    decode = jax.jit(STEP.make_decode_step(cfg))
+    sessions = SessionTable(n_slots=args.batch + 4)
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.tokens + 1
+    kw = {}
+    if cfg.family == "vlm":
+        kw["extra_embeds"] = jnp.zeros((args.batch, cfg.frontend_seq,
+                                        cfg.d_model), jnp.float32)
+        max_len += cfg.frontend_seq
+    if cfg.is_encdec:
+        kw["enc_frames"] = jnp.zeros((args.batch, cfg.frontend_seq,
+                                      cfg.d_model), jnp.float32)
+
+    done, rid, t0 = 0, 1000.0, time.time()
+    while done < args.requests:
+        ids = []
+        for _ in range(args.batch):
+            rid += 1.0
+            sessions.admit(rid)
+            ids.append(rid)
+        prompts = rng.integers(0, cfg.vocab,
+                               (args.batch, args.prompt_len)).astype(np.int32)
+        cache = MDL.make_cache(cfg, args.batch, max_len)
+        batch = dict(tokens=jnp.asarray(prompts), **kw)
+        logits, cache = prefill(params, batch, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for _ in range(args.tokens - 1):
+            tok, logits, cache = decode(params, tok, cache)
+        for r in ids:
+            sessions.evict(r)
+        done += args.batch
+    dt = time.time() - t0
+    print(f"[serve] {done} requests x {args.tokens} tokens in {dt:.1f}s "
+          f"({done * args.tokens / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

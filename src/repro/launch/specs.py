@@ -1,0 +1,96 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation (the dry-run contract)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MDL
+from ..models.config import ModelConfig, ShapeConfig
+from ..train import step as STEP
+from ..train.optim import Optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def effective_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-dependent config tweaks (accumulation only applies to train)."""
+    if shape.kind != "train":
+        return dataclasses.replace(cfg, accum_steps=1)
+    return cfg
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    a = cfg.accum_steps
+    b = shape.global_batch
+    s = shape.seq_len
+    assert b % a == 0, (b, a)
+    lead = (a, b // a) if a > 1 else (b,)
+    batch = dict(
+        tokens=SDS(lead + (s,), jnp.int32),
+        labels=SDS(lead + (s,), jnp.int32),
+    )
+    if cfg.family == "vlm":
+        batch["extra_embeds"] = SDS(lead + (cfg.frontend_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        batch["enc_frames"] = SDS(lead + (cfg.frontend_seq, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = dict(tokens=SDS((b, s), jnp.int32))
+    if cfg.family == "vlm":
+        batch["extra_embeds"] = SDS((b, cfg.frontend_seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        batch["enc_frames"] = SDS((b, cfg.frontend_seq, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    return batch
+
+
+def cache_specs_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    max_len = shape.seq_len + (cfg.frontend_seq if cfg.family == "vlm" else 0)
+    cache = jax.eval_shape(lambda: MDL.make_cache(cfg, b, max_len))
+    if cfg.is_encdec:
+        cache = dict(cache, enc_out=SDS((b, cfg.frontend_seq, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)))
+    return cache
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def params_abstract(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: MDL.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def state_abstract(cfg: ModelConfig, opt: Optimizer):
+    return jax.eval_shape(
+        lambda: STEP.init_state(jax.random.PRNGKey(0), cfg, opt))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, opt=None) -> dict:
+    """Everything the step function needs, as ShapeDtypeStructs."""
+    cfg = effective_config(cfg, shape)
+    if shape.kind == "train":
+        return dict(kind="train", cfg=cfg,
+                    state=state_abstract(cfg, opt),
+                    batch=train_batch_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return dict(kind="prefill", cfg=cfg,
+                    params=params_abstract(cfg),
+                    batch=prefill_batch_specs(cfg, shape),
+                    cache=cache_specs_abstract(cfg, shape))
+    return dict(kind="decode", cfg=cfg,
+                params=params_abstract(cfg),
+                token=decode_token_specs(cfg, shape),
+                cache=cache_specs_abstract(cfg, shape))

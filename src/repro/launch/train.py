@@ -1,0 +1,103 @@
+"""Production training launcher: mesh setup, sharded state, DILI-backed
+pipeline, checkpoint/auto-resume, straggler deadline, elastic restore.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \\
+        --steps 100 --batch 8 --seq 128 --reduced        # CPU-runnable
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \\
+        --mesh 16x16                                     # pod-scale (TPU)
+
+Fault tolerance: every --ckpt-every steps a sharded checkpoint is written
+atomically; on restart the newest valid checkpoint is restored (corrupt ones
+are skipped), onto whatever mesh is configured — elastic rescale is a
+restart with a different --mesh.  A per-step deadline flags stragglers
+(simulated hook on CPU: logs + continues; on real fleets, pair with the
+scheduler's replace-and-restart).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..data.pipeline import SyntheticLM
+from ..ft import checkpoint as CKPT
+from ..parallel import sharding as SH
+from ..train import step as STEP
+from ..train.optim import adamw, adafactor, cosine_schedule
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--mesh", default="local",
+                    help="local | 16x16 | 2x16x16")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--step-deadline-s", type=float, default=0.0,
+                    help="straggler deadline per step (0 = off)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, accum_steps=1)
+
+    if args.mesh == "local":
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh.count("x") == 2)
+
+    opt = (adafactor(lr=args.lr) if cfg.d_model >= 5120
+           else adamw(lr=args.lr,
+                      schedule=cosine_schedule(args.lr, 20, args.steps)))
+
+    pipe = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=0)
+    template = jax.eval_shape(
+        lambda: STEP.init_state(jax.random.PRNGKey(0), cfg, opt))
+    shardings = dict(
+        params=SH.param_shardings(cfg, mesh, template["params"]))
+
+    with mesh:
+        state, manifest = CKPT.restore(args.ckpt_dir, template)
+        if state is None:
+            state = STEP.init_state(jax.random.PRNGKey(0), cfg, opt)
+            start = 0
+            print("[launch] cold start", flush=True)
+        else:
+            start = manifest["step"]
+            print(f"[launch] resumed from step {start}", flush=True)
+        train_step = jax.jit(STEP.make_train_step(cfg, opt),
+                             donate_argnums=0)
+        for step in range(start, args.steps):
+            t0 = time.time()
+            b = pipe.batch_at(step)
+            state, m = train_step(state, {k: jnp.asarray(v)
+                                          for k, v in b.items()})
+            dt = time.time() - t0
+            if args.step_deadline_s and dt > args.step_deadline_s:
+                print(f"[straggler] step {step} took {dt:.2f}s "
+                      f"> deadline {args.step_deadline_s}s — flagged",
+                      flush=True)
+            if step % 10 == 0:
+                print(f"step {step} loss={float(m['loss']):.4f} "
+                      f"({dt:.2f}s/step)", flush=True)
+            if (step + 1) % args.ckpt_every == 0:
+                CKPT.save(args.ckpt_dir, step + 1, state)
+    print("[launch] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / sliding /
+softcapped), gated MLPs, embeddings.  Pure functions over param pytrees."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))            # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    hd = cfg.hd
+    return dict(
+        wq=init_dense(ks[0], cfg.d_model, cfg.n_heads * hd, dt),
+        wk=init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        wv=init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt),
+        wo=init_dense(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    )
+
+
+# Above this many score elements per (batch*head) the full S x T score
+# tensor is replaced by the flash-style chunked kernel (online softmax).
+FLASH_THRESHOLD = 4096 * 4096
+FLASH_Q_CHUNK = 1024
+FLASH_KV_CHUNK = 1024
+
+
+def _grouped_scores(q, k):
+    """GQA without materializing repeated KV.
+    q: [B,S,Hkv,G,hd]; k: [B,T,Hkv,hd] -> [B,Hkv,G,S,T]."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def _attend_dense(q, k, v, qpos, kpos, *, causal, window, attn_softcap,
+                  scale):
+    """Full-score attention.  q: [B,S,Hkv,G,hd]; k,v: [B,T,Hkv,hd]."""
+    b, s, hkv, g, hd = q.shape
+    scores = _grouped_scores(q, k).astype(jnp.float32) * scale
+    if attn_softcap:
+        scores = softcap(scores, attn_softcap)
+    mask = (kpos >= 0)[:, None, None, None, :]
+    if causal:
+        mask = mask & (kpos[:, None, None, None, :]
+                       <= qpos[:, None, None, :, None])
+    if window:
+        mask = mask & (kpos[:, None, None, None, :]
+                       > qpos[:, None, None, :, None] - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def _attend_flash(q, k, v, qpos, kpos, *, causal, window, attn_softcap,
+                  scale, q_chunk=FLASH_Q_CHUNK, kv_chunk=FLASH_KV_CHUNK):
+    """Online-softmax chunked attention: never materializes S x T scores.
+    Shapes as in _attend_dense.  Double scan: outer q chunks, inner kv."""
+    b, s, hkv, g, hd = q.shape
+    t = k.shape[1]
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    nq = (s + qc - 1) // qc
+    nk = (t + kc - 1) // kc
+    # pad to multiples
+    def padq(x, fill=0):
+        return jnp.pad(x, [(0, 0), (0, nq * qc - s)] + [(0, 0)] * (x.ndim - 2),
+                       constant_values=fill)
+
+    def padk(x, fill=0):
+        return jnp.pad(x, [(0, 0), (0, nk * kc - t)] + [(0, 0)] * (x.ndim - 2),
+                       constant_values=fill)
+    qp = padq(q).reshape(b, nq, qc, hkv, g, hd)
+    qpp = padq(qpos, -2).reshape(b, nq, qc)
+    kp = padk(k).reshape(b, nk, kc, hkv, hd)
+    vp = padk(v).reshape(b, nk, kc, hkv, hd)
+    kpp = padk(kpos, -1).reshape(b, nk, kc)
+
+    def q_step(_, qi):
+        qq, qpos_c = qi                       # [B,qc,Hkv,G,hd], [B,qc]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kk, vv, kpos_c = ki
+            sc = jnp.einsum("bskgd,btkd->bkgst", qq, kk).astype(jnp.float32)
+            sc = sc * scale
+            if attn_softcap:
+                sc = softcap(sc, attn_softcap)
+            msk = (kpos_c >= 0)[:, None, None, None, :]
+            msk = msk & (kpos_c[:, None, None, None, :]
+                         <= qpos_c[:, None, None, :, None]) if causal else msk
+            if window:
+                msk = msk & (kpos_c[:, None, None, None, :]
+                             > qpos_c[:, None, None, :, None] - window)
+            sc = jnp.where(msk, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))             # [B,Hkv,G,qc]
+            alpha = jnp.exp(m - m_new)
+            pe = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + pe.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", pe.astype(vv.dtype), vv
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd), jnp.float32)   # f32 accumulator
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4),
+             kpp.transpose(1, 0, 2)))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(v.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)          # [B,qc,Hkv,G,hd]
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qp.transpose(1, 0, 2, 3, 4, 5),
+                            qpp.transpose(1, 0, 2)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * qc, hkv, g, hd)
+    return out[:, :s]
+
+
+def attention(p, cfg, x, positions, *, causal=True, window=0,
+              kv=None, kv_positions=None, cross_kv=None):
+    """Batched GQA without KV repetition.  x: [B,S,D].
+
+    kv: optional precomputed (k, v) tensors [B,T,Hkv,hd] (decode w/ cache or
+    cross attention); kv_positions: [B,T] (masking; -1 = invalid slot).
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        kpos = kv_positions
+        causal = False
+        window = 0
+    elif kv is not None:
+        k, v = kv
+        kpos = kv_positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+    else:
+        k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kpos = positions
+    qg = q.reshape(b, s, hkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    big = s * k.shape[1] > FLASH_THRESHOLD
+    fn = _attend_flash if big else _attend_dense
+    out = fn(qg, k, v, positions, kpos, causal=causal, window=window,
+             attn_softcap=cfg.attn_softcap, scale=scale)
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+
+
+def project_kv(p, cfg, x, positions):
+    """Compute rotated (k, v) for cache insertion. x: [B,S,D]."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff=None) -> Params:
+    dt = _dtype(cfg)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = dict(
+        w_up=init_dense(ks[0], cfg.d_model, d_ff, dt),
+        w_down=init_dense(ks[1], d_ff, cfg.d_model, dt),
+    )
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(ks[2], cfg.d_model, d_ff, dt)
+    return p
+
+
+def mlp(p, cfg, x):
+    up = x @ p["w_up"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p = dict(tok=(jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt))
+    if not cfg.tie_embeddings:
+        p["head"] = init_dense(ks[1], cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def embed(p, cfg, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].T
+    else:
+        logits = x @ p["head"]
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return logits

@@ -1,0 +1,245 @@
+"""Mamba-1 selective scan and Mamba-2 SSD blocks (falcon-mamba / zamba2).
+
+Training/prefill uses `jax.lax.associative_scan` over the sequence — the
+parallel-scan formulation maps the recurrence  h_t = A_t ⊙ h_{t-1} + B_t x_t
+onto TPU's log-depth tree reduction.  Decode is a single O(1) state update —
+which is why `long_500k` decode is trivial for SSM archs while full-attention
+archs are skipped (DESIGN.md section 4).
+
+State layout:
+  mamba1: conv state [B, d_conv-1, d_inner]; ssm state [B, d_inner, d_state]
+  mamba2: conv state [B, d_conv-1, d_inner(+2*groups*d_state)];
+          ssm state [B, n_heads, head_dim, d_state]
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, _dtype
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg) -> dict:
+    dt = _dtype(cfg)
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    dt_rank = max(cfg.d_model // 16, 1)
+    return dict(
+        w_in=init_dense(ks[0], cfg.d_model, 2 * di, dt),
+        conv_w=(jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                * 0.1).astype(dt),
+        conv_b=jnp.zeros((di,), dt),
+        w_xbc=init_dense(ks[2], di, dt_rank + 2 * ds, dt),
+        w_dt=init_dense(ks[3], dt_rank, di, dt),
+        dt_bias=jnp.zeros((di,), jnp.float32),
+        a_log=jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                               (di, 1))),           # [di, ds]
+        d_skip=jnp.ones((di,), jnp.float32),
+        w_out=init_dense(ks[4], di, cfg.d_model, dt),
+    )
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B,S,C]; w: [K,C] depthwise.  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y + b), new_state
+
+
+SCAN_CHUNK = 64   # sequence chunk for the selective scan (memory knob):
+                  # per-chunk state tensor is [B, chunk, d_inner, d_state]
+
+
+def _scan_combine(a, b):
+    a_l, b_l = a
+    a_r, b_r = b
+    return a_l * a_r, b_l * a_r + b_r
+
+
+def _selective_scan(u, dt_, A, B, C, h0=None, chunk: int = SCAN_CHUNK):
+    """u: [B,S,di]; dt_: [B,S,di]; A: [di,ds]; B,C: [B,S,ds].
+    Returns (y [B,S,di], h_last [B,di,ds]).
+
+    Chunked over the sequence: an outer lax.scan carries the state across
+    chunks, the inner associative_scan parallelizes within a chunk — the
+    full [B,S,di,ds] tensor (550 TB for falcon-mamba at 32k!) is never
+    materialized; peak is [B,chunk,di,ds].
+    """
+    b, s, di = u.shape
+    ds = A.shape[1]
+    sdt = u.dtype                 # scan compute dtype (perf knob)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, ds), jnp.float32)
+    c = min(chunk, s)
+    nc = (s + c - 1) // c
+    pad = nc * c - s
+
+    def padded(x):
+        return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+
+    uc = padded(u).reshape(b, nc, c, di).transpose(1, 0, 2, 3)
+    dtc = padded(dt_).reshape(b, nc, c, di).transpose(1, 0, 2, 3)
+    Bc = padded(B).reshape(b, nc, c, ds).transpose(1, 0, 2, 3)
+    Cc = padded(C).reshape(b, nc, c, ds).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        u1, dt1, B1, C1 = inp                      # [B,c,...]
+        dA = jnp.exp(dt1[..., None] * A[None, None]).astype(sdt)
+        dBu = (dt1[..., None] * B1[:, :, None, :]
+               * u1[..., None]).astype(sdt)        # [B,c,di,ds]
+        dBu = dBu.at[:, 0].add((dA[:, 0].astype(jnp.float32) * h).astype(sdt))
+        _, hh = jax.lax.associative_scan(_scan_combine, (dA, dBu), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hh, C1)
+        return hh[:, -1].astype(jnp.float32), y    # f32 carry across chunks
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * c, di)[:, :s]
+    return y, h_last
+
+
+def mamba_block(p, cfg, x, state=None):
+    """x: [B,S,D] -> (y, new_state).  state = (conv_state, ssm_state)."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    dt_rank = p["w_dt"].shape[0]
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    xbc = u @ p["w_xbc"]
+    dt_in, Bm, Cm = jnp.split(xbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt_ = jax.nn.softplus((dt_in @ p["w_dt"]).astype(jnp.float32)
+                          + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])                                # [di, ds]
+    h0 = state[1] if state is not None else None
+    sdt = jnp.dtype(getattr(cfg, "scan_dtype", "float32"))
+    y, h_last = _selective_scan(u.astype(sdt), dt_.astype(sdt), A.astype(sdt),
+                                Bm.astype(sdt), Cm.astype(sdt), h0,
+                                chunk=getattr(cfg, "scan_chunk", SCAN_CHUNK))
+    y = y.astype(jnp.float32)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["w_out"], (new_conv, h_last)
+
+
+def mamba_decode_step(p, cfg, x, state):
+    """Single-token decode: x [B,1,D]; O(1) state update."""
+    return mamba_block(p, cfg, x, state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, scalar-decay-per-head)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg) -> dict:
+    dt = _dtype(cfg)
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads or max(di // 64, 1)
+    ks = jax.random.split(key, 6)
+    return dict(
+        w_in=init_dense(ks[0], cfg.d_model, 2 * di + 2 * ds + nh, dt),
+        conv_w=(jax.random.normal(ks[1], (cfg.d_conv, di + 2 * ds),
+                                  jnp.float32) * 0.1).astype(dt),
+        conv_b=jnp.zeros((di + 2 * ds,), dt),
+        a_log=jnp.zeros((nh,), jnp.float32),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        d_skip=jnp.ones((nh,), jnp.float32),
+        norm_w=jnp.zeros((di,), jnp.float32),
+        w_out=init_dense(ks[2], di, cfg.d_model, dt),
+    )
+
+
+def _ssd_scan(u_h, dt_, A_h, Bm, Cm, h0, chunk: int = SCAN_CHUNK):
+    """Mamba-2 SSD dual form, chunked.
+
+    u_h: [B,S,nh,hd]; dt_: [B,S,nh]; A_h: [nh] (negative); Bm,Cm: [B,S,ds];
+    h0: [B,nh,hd,ds].  Within a chunk the recurrence collapses to an
+    attention-like [c,c] decay-weighted matmul (never materializes the
+    per-position state tensor); across chunks a lax.scan carries the state.
+    """
+    b, s, nh, hd = u_h.shape
+    ds = Bm.shape[-1]
+    c = min(chunk, s)
+    nc = (s + c - 1) // c
+    pad = nc * c - s
+
+    def padded(x):
+        return jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+
+    ld = A_h[None, None, :] * dt_                    # [B,S,nh] log-decay <= 0
+    uc = padded(u_h).reshape(b, nc, c, nh, hd).transpose(1, 0, 2, 3, 4)
+    dtc = padded(dt_).reshape(b, nc, c, nh).transpose(1, 0, 2, 3)
+    ldc = padded(ld).reshape(b, nc, c, nh).transpose(1, 0, 2, 3)
+    Bc = padded(Bm).reshape(b, nc, c, ds).transpose(1, 0, 2, 3)
+    Cc = padded(Cm).reshape(b, nc, c, ds).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        u1, dt1, ld1, B1, C1 = inp
+        g = jnp.cumsum(ld1, axis=1)                          # [B,c,nh]
+        # intra-chunk: w[t,s] = exp(g_t - g_s) * dt_s * (C_t . B_s), s <= t
+        cb = jnp.einsum("btk,bsk->bts", C1, B1)              # [B,c,c]
+        dec = jnp.exp(g[:, :, None, :] - g[:, None, :, :])   # [B,t,s,nh]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(tri[None, :, :, None],
+                      dec * dt1[:, None, :, :], 0.0) * cb[..., None]
+        y_intra = jnp.einsum("btsn,bsnd->btnd", w, u1)
+        # inter-chunk: y_t += exp(g_t) * (C_t . h)
+        y_inter = (jnp.exp(g)[..., None]
+                   * jnp.einsum("btk,bndk->btnd", C1, h))
+        # state: h' = exp(g_end)*h + sum_s exp(g_end - g_s)*dt_s * u_s (x) B_s
+        g_end = g[:, -1]                                     # [B,nh]
+        w_end = jnp.exp(g_end[:, None, :] - g) * dt1         # [B,c,nh]
+        h_new = (jnp.exp(g_end)[:, :, None, None] * h
+                 + jnp.einsum("bsn,bsnd,bsk->bndk", w_end, u1, B1))
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), u_h.dtype)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (uc, dtc, ldc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, nh, hd)[:, :s]
+    return y, h_last
+
+
+def mamba2_block(p, cfg, x, state=None):
+    """SSD with scalar per-head decay.  x: [B,S,D]."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads or max(di // 64, 1)
+    hd = di // nh
+    zxbcdt = x @ p["w_in"]
+    z, xbc, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    u, Bm, Cm = jnp.split(xbc, [di, di + ds], axis=-1)
+    dt_ = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A_h = -jnp.exp(p["a_log"])                                        # [nh]
+    u_h = u.reshape(b, s, nh, hd).astype(jnp.float32)
+    h0 = state[1] if state is not None else None
+    y, h_last = _ssd_scan(u_h, dt_, A_h, Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), h0)
+    y = y + u_h * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * (1.0 + p["norm_w"])
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], (new_conv, h_last)

@@ -1,0 +1,542 @@
+"""Unified decoder LM covering all assigned families, built as a
+scan-over-layers with stacked params (small HLO at any depth, remat-friendly).
+
+Families:
+  dense        — llama-style pre-norm GQA + gated MLP (granite, phi3,
+                 command-r [parallel block], internvl2 backbone)
+  dense+gemma2 — alternating local/global attention, attn & logit softcaps,
+                 post-norms
+  moe          — router + sort-based capacity dispatch (granite-moe, grok)
+  ssm          — mamba-1 stack (falcon-mamba)
+  hybrid       — mamba-2 stack + ONE shared attention block applied every k
+                 blocks (zamba2)
+  audio        — whisper-style encoder-decoder (frontend stubbed)
+  vlm          — dense backbone consuming precomputed patch embeds + tokens
+
+Entry points: init_params, forward_train, prefill, decode_step, make_cache.
+All are pure; distribution happens in launch/ via pjit shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba as M
+from . import moe as X
+from .config import ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: ModelConfig):
+    """Return an init function for ONE layer's params (to be vmapped)."""
+    def init_one(key):
+        ks = jax.random.split(key, 8)
+        dt = jnp.dtype(cfg.dtype)
+        p: Params = {}
+        if cfg.family == "ssm":
+            p["norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["mamba"] = M.init_mamba(ks[0], cfg)
+        elif cfg.family == "hybrid":
+            p["norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["mamba"] = M.init_mamba2(ks[0], cfg)
+        else:
+            p["norm1"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["attn"] = L.init_attention(ks[0], cfg)
+            if cfg.attn_type == "local_global":   # gemma2 post-norms
+                p["post_norm1"] = jnp.zeros((cfg.d_model,), jnp.float32)
+                p["post_norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            if cfg.n_experts > 0:
+                p["moe"] = X.init_moe(ks[1], cfg)
+            else:
+                p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    return init_one
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = dict(embed=L.init_embedding(ks[0], cfg))
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    p["layers"] = jax.vmap(_layer_init(cfg))(layer_keys)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        sk = jax.random.split(ks[2], 3)
+        p["shared_attn"] = dict(
+            norm1=jnp.zeros((cfg.d_model,), jnp.float32),
+            norm2=jnp.zeros((cfg.d_model,), jnp.float32),
+            attn=L.init_attention(sk[0], cfg),
+            mlp=L.init_mlp(sk[1], cfg),
+        )
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        ek = jax.random.split(ks[3], cfg.encoder_layers)
+
+        def enc_init(k):
+            k1, k2 = jax.random.split(k)
+            return dict(norm1=jnp.zeros((cfg.d_model,), jnp.float32),
+                        norm2=jnp.zeros((cfg.d_model,), jnp.float32),
+                        attn=L.init_attention(k1, enc_cfg),
+                        mlp=L.init_mlp(k2, enc_cfg))
+        p["encoder"] = jax.vmap(enc_init)(ek)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        # decoder cross-attention params per layer
+        ck = jax.random.split(ks[4], cfg.n_layers)
+
+        def cross_init(k):
+            return dict(norm=jnp.zeros((cfg.d_model,), jnp.float32),
+                        attn=L.init_attention(k, cfg))
+        p["cross"] = jax.vmap(cross_init)(ck)
+    if cfg.frontend == "vision":
+        # learned projection for the (stubbed) patch embeddings
+        p["patch_proj"] = L.init_dense(ks[5], cfg.d_model, cfg.d_model,
+                                       jnp.dtype(cfg.dtype))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _is_global_layer(cfg, i):
+    # gemma2: alternate local (even) / global (odd)
+    return (i % 2) == 1
+
+
+def _attn_block(pl_, cfg, x, positions, kv=None, kv_positions=None,
+                window=0):
+    h = L.rms_norm(x, pl_["norm1"], cfg.norm_eps)
+    a = L.attention(pl_["attn"], cfg, h, positions, causal=True,
+                    window=window, kv=kv, kv_positions=kv_positions)
+    if cfg.attn_type == "local_global":
+        a = L.rms_norm(a, pl_["post_norm1"], cfg.norm_eps)
+    if cfg.parallel_block:
+        m = L.mlp(pl_["mlp"], cfg, L.rms_norm(x, pl_["norm2"], cfg.norm_eps))
+        return x + a + m, jnp.float32(0.0)
+    x = x + a
+    h = L.rms_norm(x, pl_["norm2"], cfg.norm_eps)
+    if cfg.n_experts > 0:
+        m, aux = X.moe_block(pl_["moe"], cfg, h)
+    else:
+        m, aux = L.mlp(pl_["mlp"], cfg, h), jnp.float32(0.0)
+    if cfg.attn_type == "local_global":
+        m = L.rms_norm(m, pl_["post_norm2"], cfg.norm_eps)
+    return x + m, aux
+
+
+def _remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    return jax.checkpoint(
+        f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _run_decoder(params, cfg: ModelConfig, x, positions, *,
+                 make_cache_out=False, enc_out=None, enc_positions=None,
+                 shared_cache=None):
+    """Scan over stacked layers.  Returns (x, aux_loss, cache_kv or None).
+
+    cache_kv (when make_cache_out): per-layer rotated (k, v) — stacked ys.
+    """
+    b, s, _ = x.shape
+    li = jnp.arange(cfg.n_layers)
+
+    if cfg.family in ("ssm", "hybrid"):
+        blk = M.mamba_block if cfg.family == "ssm" else M.mamba2_block
+        shared = params.get("shared_attn")
+        k_every = cfg.shared_attn_every
+        fill_shared = (make_cache_out and shared is not None
+                       and shared_cache is not None)
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            pl_, i = inp
+            h = L.rms_norm(x, pl_["norm"], cfg.norm_eps)
+            y, st = blk(pl_["mamba"], cfg, h)
+            x = x + y
+            if shared is not None and k_every:
+                def apply_shared(args):
+                    x, sk, sv = args
+                    h = L.rms_norm(x, shared["norm1"], cfg.norm_eps)
+                    if fill_shared:
+                        kk, vv = L.project_kv(shared["attn"], cfg, h,
+                                              positions)
+                        site = i // k_every
+                        zi = jnp.zeros((), site.dtype)
+                        sk = jax.lax.dynamic_update_slice(
+                            sk, kk[None].astype(sk.dtype),
+                            (site, zi, zi, zi, zi))
+                        sv = jax.lax.dynamic_update_slice(
+                            sv, vv[None].astype(sv.dtype),
+                            (site, zi, zi, zi, zi))
+                    a = L.attention(shared["attn"], cfg, h, positions,
+                                    causal=True)
+                    x = x + a
+                    h = L.rms_norm(x, shared["norm2"], cfg.norm_eps)
+                    return x + L.mlp(shared["mlp"], cfg, h), sk, sv
+                x, sk, sv = jax.lax.cond((i % k_every) == (k_every - 1),
+                                         apply_shared, lambda a: a,
+                                         (x, sk, sv))
+            out = st if make_cache_out else None
+            return (x, sk, sv), out
+
+        body = _remat(body, cfg)
+        if fill_shared:
+            sk0, sv0 = shared_cache
+        else:
+            sk0 = sv0 = jnp.zeros((1,), x.dtype)   # placeholder carry
+        (x, sk, sv), states = jax.lax.scan(body, (x, sk0, sv0),
+                                           (params["layers"], li))
+        return x, jnp.float32(0.0), (states, (sk, sv) if fill_shared else None)
+
+    # attention families
+    def body(carry, inp):
+        x, aux = carry
+        pl_, i = inp
+        if cfg.attn_type == "local_global":
+            # window must be static for the masking math: two-branch cond
+            def local_fn(x):
+                return _attn_block(pl_, cfg, x, positions, window=cfg.window)
+
+            def global_fn(x):
+                return _attn_block(pl_, cfg, x, positions, window=0)
+            x2, a2 = jax.lax.cond(_is_global_layer(cfg, i), global_fn,
+                                  local_fn, x)
+        else:
+            x2, a2 = _attn_block(pl_, cfg, x, positions, window=0)
+        cache_out = None
+        if make_cache_out:
+            h = L.rms_norm(x, pl_["norm1"], cfg.norm_eps)
+            cache_out = L.project_kv(pl_["attn"], cfg, h, positions)
+        return (x2, aux + a2), cache_out
+
+    if not cfg.is_encdec:
+        body = _remat(body, cfg)
+        (x, aux), cache = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       (params["layers"], li))
+        return x, aux, cache
+
+    # ---- enc-dec path (whisper): self-attn -> cross-attn -> FFN ----------
+    def body_ed(carry, inp):
+        x, aux = carry
+        pl_, pc, i = inp
+        h = L.rms_norm(x, pl_["norm1"], cfg.norm_eps)
+        cache_out = (L.project_kv(pl_["attn"], cfg, h, positions)
+                     if make_cache_out else None)
+        a = L.attention(pl_["attn"], cfg, h, positions, causal=True)
+        x = x + a
+        h = L.rms_norm(x, pc["norm"], cfg.norm_eps)
+        ca = L.attention(pc["attn"], cfg, h, positions,
+                         cross_kv=_cross_kv(pc["attn"], cfg, enc_out),
+                         kv_positions=enc_positions)
+        x = x + ca
+        h = L.rms_norm(x, pl_["norm2"], cfg.norm_eps)
+        x = x + L.mlp(pl_["mlp"], cfg, h)
+        return (x, aux), cache_out
+
+    body_ed = _remat(body_ed, cfg)
+    (x, aux), cache = jax.lax.scan(
+        body_ed, (x, jnp.float32(0.0)),
+        (params["layers"], params["cross"], li))
+    return x, aux, cache
+
+
+def _cross_kv(pa, cfg, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.hd
+    k = (enc_out @ pa["wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+    v = (enc_out @ pa["wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def run_encoder(params, cfg: ModelConfig, frames):
+    """Whisper encoder over (stubbed) frame embeddings [B, T, D]."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    x = frames
+
+    def body(x, pl_):
+        h = L.rms_norm(x, pl_["norm1"], cfg.norm_eps)
+        a = L.attention(pl_["attn"], cfg, h, positions, causal=False)
+        x = x + a
+        h = L.rms_norm(x, pl_["norm2"], cfg.norm_eps)
+        return x + L.mlp(pl_["mlp"], cfg, h), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None,
+                  enc_frames=None):
+    """tokens: [B,S] -> logits [B,S,V] (f32), aux loss."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+    if cfg.family == "vlm" and extra_embeds is not None:
+        patches = extra_embeds @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = run_encoder(params, cfg, enc_frames)
+        enc_positions = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                         (b, enc_out.shape[1]))
+    x, aux, _ = _run_decoder(params, cfg, x, positions, enc_out=enc_out,
+                             enc_positions=enc_positions)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm" and extra_embeds is not None:
+        x = x[:, -s:]           # logits over the text positions only
+    return L.lm_logits(params["embed"], cfg, x), aux
+
+
+def loss_fn(params, cfg, tokens, labels, extra_embeds=None, enc_frames=None):
+    logits, aux = forward_train(params, cfg, tokens,
+                                extra_embeds=extra_embeds,
+                                enc_frames=enc_frames)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: cache creation, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    hd = cfg.hd
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        return dict(
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, di), dt),
+            ssm=jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state),
+                          jnp.float32),
+            pos=jnp.zeros((), jnp.int32))
+    if cfg.family == "hybrid":
+        di = cfg.d_inner
+        nh = cfg.ssm_heads or max(di // 64, 1)
+        n_sites = (cfg.n_layers + cfg.shared_attn_every - 1) \
+            // max(cfg.shared_attn_every, 1) if cfg.shared_attn_every else 0
+        c = dict(
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                            di + 2 * cfg.ssm_state), dt),
+            ssm=jnp.zeros((cfg.n_layers, batch, nh, di // nh, cfg.ssm_state),
+                          jnp.float32),
+            pos=jnp.zeros((), jnp.int32))
+        if n_sites:
+            c["shared_k"] = jnp.zeros((n_sites, batch, max_len,
+                                       cfg.n_kv_heads, hd), dt)
+            c["shared_v"] = jnp.zeros_like(c["shared_k"])
+        return c
+    return dict(
+        k=jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+        v=jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, extra_embeds=None,
+            enc_frames=None):
+    """Run the prompt, fill the cache, return (last-token logits, cache)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+    if cfg.family == "vlm" and extra_embeds is not None:
+        patches = extra_embeds @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    s_eff = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_eff), (b, s_eff))
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = run_encoder(params, cfg, enc_frames)
+        enc_positions = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                         (b, enc_out.shape[1]))
+        cache = dict(cache, enc_out=enc_out)
+    shared_cache = None
+    if cfg.family == "hybrid" and "shared_k" in cache:
+        # prefill writes into the leading s_eff positions of the site caches
+        sk = cache["shared_k"][:, :, :s_eff]
+        sv = cache["shared_v"][:, :, :s_eff]
+        shared_cache = (sk, sv)
+    x, aux, kv = _run_decoder(params, cfg, x, positions, make_cache_out=True,
+                              enc_out=enc_out, enc_positions=enc_positions,
+                              shared_cache=shared_cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x[:, -1:])
+    if cfg.family == "ssm":
+        (conv, ssm), _ = kv
+        cache = dict(cache, conv=conv, ssm=ssm,
+                     pos=jnp.asarray(s_eff, jnp.int32))
+    elif cfg.family == "hybrid":
+        (conv, ssm), shared_kv = kv
+        cache = dict(cache, conv=conv, ssm=ssm,
+                     pos=jnp.asarray(s_eff, jnp.int32))
+        if shared_kv is not None:
+            sk, sv = shared_kv
+            cache["shared_k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["shared_k"], sk.astype(cache["shared_k"].dtype), 0,
+                axis=2)
+            cache["shared_v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["shared_v"], sv.astype(cache["shared_v"].dtype), 0,
+                axis=2)
+    else:
+        k, v = kv                   # [L, B, S, Hkv, hd]
+        cache = dict(cache,
+                     k=jax.lax.dynamic_update_slice_in_dim(
+                         cache["k"], k.astype(cache["k"].dtype), 0, axis=2),
+                     v=jax.lax.dynamic_update_slice_in_dim(
+                         cache["v"], v.astype(cache["v"].dtype), 0, axis=2),
+                     pos=jnp.asarray(s_eff, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """One token for the whole batch.  token: [B, 1]."""
+    b = token.shape[0]
+    x = L.embed(params["embed"], cfg, token)
+    pos_scalar = cache["pos"]
+    positions = jnp.broadcast_to(pos_scalar, (b, 1)).astype(jnp.int32)
+    li = jnp.arange(cfg.n_layers)
+
+    if cfg.family in ("ssm", "hybrid"):
+        blk = (M.mamba_block if cfg.family == "ssm" else M.mamba2_block)
+        shared = params.get("shared_attn")
+        k_every = cfg.shared_attn_every
+        site_of = li // max(k_every, 1) if k_every else li * 0
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            pl_, conv, ssm, i, site = inp
+            h = L.rms_norm(x, pl_["norm"], cfg.norm_eps)
+            y, (conv2, ssm2) = blk(pl_["mamba"], cfg, h, (conv, ssm))
+            x = x + y
+            if shared is not None and k_every:
+                def apply_shared(args):
+                    x, sk, sv = args
+                    h = L.rms_norm(x, shared["norm1"], cfg.norm_eps)
+                    kk, vv = L.project_kv(shared["attn"], cfg, h, positions)
+                    z = pos_scalar * 0
+                    skc = jax.lax.dynamic_update_slice(
+                        sk, kk[None].astype(sk.dtype),
+                        (site.astype(pos_scalar.dtype), z, pos_scalar, z, z))
+                    svc = jax.lax.dynamic_update_slice(
+                        sv, vv[None].astype(sv.dtype),
+                        (site.astype(pos_scalar.dtype), z, pos_scalar, z, z))
+                    t = skc.shape[2]
+                    kv_pos = jnp.where(jnp.arange(t) <= pos_scalar,
+                                       jnp.arange(t), -1)
+                    kv_pos = jnp.broadcast_to(kv_pos, (b, t))
+                    a = L.attention(shared["attn"], cfg, h, positions,
+                                    kv=(skc[site], svc[site]),
+                                    kv_positions=kv_pos)
+                    x = x + a
+                    h2 = L.rms_norm(x, shared["norm2"], cfg.norm_eps)
+                    return x + L.mlp(shared["mlp"], cfg, h2), skc, svc
+                x, sk, sv = jax.lax.cond(
+                    (i % k_every) == (k_every - 1), apply_shared,
+                    lambda args: args, (x, sk, sv))
+            return (x, sk, sv), (conv2, ssm2)
+
+        sk = cache.get("shared_k", jnp.zeros((1, b, 1, cfg.n_kv_heads,
+                                              cfg.hd), x.dtype))
+        sv = cache.get("shared_v", sk)
+        (x, sk, sv), (conv, ssm) = jax.lax.scan(
+            body, (x, sk, sv),
+            (params["layers"], cache["conv"], cache["ssm"], li, site_of))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(params["embed"], cfg, x)
+        new_cache = dict(cache, conv=conv, ssm=ssm, pos=pos_scalar + 1)
+        if "shared_k" in cache:
+            new_cache["shared_k"] = sk
+            new_cache["shared_v"] = sv
+        return logits, new_cache
+
+    # attention families: update per-layer KV, attend over prefix
+    t = cache["k"].shape[2]
+    kv_pos_row = jnp.where(jnp.arange(t) <= pos_scalar, jnp.arange(t), -1)
+    kv_pos = jnp.broadcast_to(kv_pos_row, (b, t))
+
+    enc_out = cache.get("enc_out")
+    enc_positions = None
+    if enc_out is not None:
+        enc_positions = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                         (b, enc_out.shape[1]))
+
+    def body(carry, inp):
+        x, aux = carry
+        if cfg.is_encdec:
+            pl_, pc, kc, vc, i = inp
+        else:
+            pl_, kc, vc, i = inp
+            pc = None
+        h = L.rms_norm(x, pl_["norm1"], cfg.norm_eps)
+        kk, vv = L.project_kv(pl_["attn"], cfg, h, positions)
+        z = pos_scalar * 0
+        kc = jax.lax.dynamic_update_slice(kc, kk.astype(kc.dtype),
+                                          (z, pos_scalar, z, z))
+        vc = jax.lax.dynamic_update_slice(vc, vv.astype(vc.dtype),
+                                          (z, pos_scalar, z, z))
+
+        def do_attn(window):
+            return L.attention(pl_["attn"], cfg, h, positions,
+                               kv=(kc, vc), kv_positions=kv_pos,
+                               window=window)
+        if cfg.attn_type == "local_global":
+            a = jax.lax.cond(_is_global_layer(cfg, i),
+                             lambda: do_attn(0), lambda: do_attn(cfg.window))
+        else:
+            a = do_attn(0)
+        if cfg.attn_type == "local_global":
+            a = L.rms_norm(a, pl_["post_norm1"], cfg.norm_eps)
+        if cfg.parallel_block:
+            m = L.mlp(pl_["mlp"], cfg,
+                      L.rms_norm(x, pl_["norm2"], cfg.norm_eps))
+            x = x + a + m
+            return (x, aux), (kc, vc)
+        x = x + a
+        if pc is not None:
+            hh = L.rms_norm(x, pc["norm"], cfg.norm_eps)
+            ca = L.attention(pc["attn"], cfg, hh, positions,
+                             cross_kv=_cross_kv(pc["attn"], cfg, enc_out),
+                             kv_positions=enc_positions)
+            x = x + ca
+        h2 = L.rms_norm(x, pl_["norm2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            m, a2 = X.moe_block(pl_["moe"], cfg, h2)
+        else:
+            m, a2 = L.mlp(pl_["mlp"], cfg, h2), jnp.float32(0.0)
+        if cfg.attn_type == "local_global":
+            m = L.rms_norm(m, pl_["post_norm2"], cfg.norm_eps)
+        return (x + m, aux + a2), (kc, vc)
+
+    xs = ((params["layers"], params["cross"], cache["k"], cache["v"], li)
+          if cfg.is_encdec else
+          (params["layers"], cache["k"], cache["v"], li))
+    (x, aux), (k2, v2) = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, dict(cache, k=k2, v=v2, pos=pos_scalar + 1)

@@ -1,0 +1,56 @@
+"""Serving-side session table: session-id -> KV-cache slot, through a DILI.
+
+Admission inserts (Algorithm 7), eviction deletes (Algorithm 8) — the
+serving control path exercises the paper's update machinery; the hot lookup
+path is the batched device search on the published snapshot.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import search as S
+from ..core.dili import bulk_load
+from ..core.flat import flatten
+
+
+class SessionTable:
+    def __init__(self, n_slots: int, warm_ids=None):
+        self.n_slots = n_slots
+        self.free = list(range(n_slots))[::-1]
+        warm = np.asarray(sorted(warm_ids or [1.0, 2.0]), np.float64)
+        slots = np.array([self._take() for _ in warm], np.int64)
+        self.dili = bulk_load(warm, slots)
+        self._publish()
+
+    def _take(self) -> int:
+        if not self.free:
+            raise RuntimeError("no free KV slots")
+        return self.free.pop()
+
+    def _publish(self):
+        self.flat = flatten(self.dili)
+        self.idx = S.device_arrays(self.flat)
+
+    def admit(self, session_id: float) -> int:
+        slot = self._take()
+        if not self.dili.insert(float(session_id), slot):
+            self.free.append(slot)
+            raise KeyError(f"session {session_id} already admitted")
+        self._publish()
+        return slot
+
+    def evict(self, session_id: float) -> None:
+        slot = self.dili.search(float(session_id))
+        if slot is None:
+            raise KeyError(session_id)
+        self.dili.delete(float(session_id))
+        self.free.append(int(slot))
+        self._publish()
+
+    def lookup_batch(self, session_ids) -> tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        v, f = S.search_batch(self.idx,
+                              jnp.asarray(session_ids, jnp.float64),
+                              max_depth=self.flat.max_depth + 2)
+        return np.asarray(v), np.asarray(f)

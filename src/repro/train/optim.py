@@ -1,0 +1,138 @@
+"""Optimizers (AdamW, Adafactor) as minimal pure-JAX (init, update) pairs.
+
+Adafactor's factored second moment keeps optimizer state O(d) instead of
+O(d^2-ish), which is what lets the 104B/314B configs fit a v5e-256 pod with
+FSDP (DESIGN.md section 5); AdamW is the default for <= 14B.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable      # (grads, state, params) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), n
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+          clip_norm=1.0, schedule=None):
+    lr_fn = schedule or (lambda s: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return dict(mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gn = clip_by_global_norm(grads, clip_norm)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, dict(mu=mu, nu=nu, step=step), dict(grad_norm=gn)
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_norm=1.0,
+              weight_decay=0.0, schedule=None, min_dim_factored=128):
+    """Factored second-moment optimizer (Shazeer & Stern 2018), simplified."""
+    lr_fn = schedule or (lambda s: lr)
+
+    def _factored(shape):
+        return len(shape) >= 2 and shape[-1] >= min_dim_factored and \
+            shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return dict(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return dict(v=jnp.zeros_like(p, jnp.float32))
+        return dict(v=jax.tree.map(one, params,
+                                   is_leaf=lambda x: hasattr(x, "shape")),
+                    step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gn = clip_by_global_norm(grads, clip_norm)
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def one(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                nv = dict(vr=vr, vc=vc)
+            else:
+                nv = dict(v=beta * v["v"] + (1 - beta) * g2)
+                u = g * jax.lax.rsqrt(nv["v"] + eps)
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        new = [one(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([n[0] for n in new])
+        new_v = tdef.unflatten([n[1] for n in new])
+        return new_params, dict(v=new_v, step=step), dict(grad_norm=gn)
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

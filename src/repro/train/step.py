@@ -1,0 +1,75 @@
+"""Train/serve step builders: grad accumulation, optimizer application,
+serve prefill/decode.  Pure functions of (state, batch) suitable for pjit."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MDL
+from ..models.config import ModelConfig
+from .optim import Optimizer
+
+
+def init_state(rng, cfg: ModelConfig, opt: Optimizer):
+    params = MDL.init_params(rng, cfg)
+    return dict(params=params, opt=opt.init(params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def state_shape(cfg: ModelConfig, opt: Optimizer):
+    return jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0), cfg, opt))
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer):
+    """batch: dict(tokens, labels[, extra_embeds, enc_frames]).
+    With cfg.accum_steps > 1 the arrays carry a leading accumulation dim."""
+
+    def loss_for(params, mb):
+        return MDL.loss_fn(params, cfg, mb["tokens"], mb["labels"],
+                           extra_embeds=mb.get("extra_embeds"),
+                           enc_frames=mb.get("enc_frames"))
+
+    def train_step(state, batch):
+        params = state["params"]
+        if cfg.accum_steps > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)), batch)
+            inv = 1.0 / cfg.accum_steps
+            g = jax.tree.map(lambda x: x * inv, g)
+            loss = loss * inv
+        else:
+            loss, g = jax.value_and_grad(loss_for)(params, batch)
+        new_params, new_opt, metrics = opt.update(g, state["opt"], params)
+        new_state = dict(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        return new_state, dict(loss=loss, **metrics)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return MDL.prefill(params, cfg, batch["tokens"], cache,
+                           extra_embeds=batch.get("extra_embeds"),
+                           enc_frames=batch.get("enc_frames"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, cache):
+        logits, cache = MDL.decode_step(params, cfg, token, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+            .astype(jnp.int32)
+        return next_tok, logits, cache
+    return serve_step

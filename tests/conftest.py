@@ -1,0 +1,24 @@
+"""Shared fixtures.  x64 is enabled for the whole test session: the index
+(key) paths need f64 and the model paths use explicit dtypes throughout."""
+import os
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_keys(dist: str, n: int, rng) -> np.ndarray:
+    if dist == "logn":
+        return np.unique(rng.lognormal(0, 1, n))
+    if dist == "uniform":
+        return np.unique(rng.uniform(0, 1e9, n))
+    if dist == "fb":        # long-tail pareto (FB-id-like)
+        return np.unique((rng.pareto(1.1, n) + 1) * 1e5)
+    if dist == "wikits":    # near-sequential timestamps
+        return np.unique(np.cumsum(rng.integers(1, 5, n)).astype(np.float64))
+    raise ValueError(dist)

@@ -1,0 +1,46 @@
+"""All competitor indexes: correctness + no false positives on 2 dists."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import ALL_BASELINES
+from tests.conftest import make_keys
+
+
+@pytest.mark.parametrize("B", ALL_BASELINES, ids=lambda b: b.name)
+@pytest.mark.parametrize("dist", ["logn", "uniform"])
+def test_baseline_correct(B, dist):
+    rng = np.random.default_rng(31)
+    keys = make_keys(dist, 20000, rng)
+    vals = np.arange(len(keys), dtype=np.int64)
+    st = B.build(keys, vals)
+    dev = B.device(st)
+    qi = rng.integers(0, len(keys), 4096)
+    v, f, pr = [np.asarray(x) for x in B.lookup(dev, jnp.asarray(keys[qi]))]
+    assert f.all(), B.name
+    assert np.array_equal(v, qi), B.name
+    assert (pr > 0).all()
+    # absent keys
+    qi2 = rng.integers(0, len(keys) - 1, 2048)
+    mids = (keys[qi2] + keys[qi2 + 1]) / 2
+    ok = (mids != keys[qi2]) & (mids != keys[qi2 + 1])
+    _, fm, _ = B.lookup(dev, jnp.asarray(mids))
+    assert not np.asarray(fm)[ok].any(), B.name
+
+
+def test_probe_ordering_learned_beats_binary():
+    """Sanity: learned indexes touch fewer entries than binary search
+    (the paper's core claim, Table 5)."""
+    rng = np.random.default_rng(32)
+    keys = make_keys("logn", 30000, rng)
+    vals = np.arange(len(keys), dtype=np.int64)
+    qi = rng.integers(0, len(keys), 4096)
+    q = jnp.asarray(keys[qi])
+    probes = {}
+    for B in ALL_BASELINES:
+        st = B.build(keys, vals)
+        _, _, pr = B.lookup(B.device(st), q)
+        probes[B.name] = float(np.asarray(pr).mean())
+    assert probes["RMI"] < probes["BinS"]
+    assert probes["LIPP"] < probes["BinS"]
+    assert probes["RS"] < probes["BinS"]

@@ -1,0 +1,78 @@
+"""Unit tests for the BU-Tree construction (paper Algorithms 2 & 3)."""
+import numpy as np
+import pytest
+
+from repro.core.bu_tree import (SegStats, build_bu_tree, bu_search,
+                                greedy_merging, least_squares)
+from tests.conftest import make_keys
+
+
+def test_least_squares_exact_line():
+    x = np.array([1.0, 2.0, 3.0, 4.0])
+    a, b = least_squares(x, 2 * x + 3)
+    assert abs(a - 3) < 1e-9 and abs(b - 2) < 1e-9
+
+
+def test_least_squares_tight_cluster_nonzero_slope():
+    # catastrophic-cancellation regression: keys 7.3e-9 apart must separate
+    x = np.array([3.584090078469237, 3.584090085784596])
+    a, b = least_squares(x, np.array([0.0, 1.0]))
+    assert b > 0
+    assert abs((a + b * x[0]) - 0.0) < 1e-6
+    assert abs((a + b * x[1]) - 1.0) < 1e-6
+
+
+def test_segstats_merge_equals_full():
+    rng = np.random.default_rng(0)
+    x = np.sort(rng.uniform(0, 1, 100))
+    y = np.arange(100.0)
+    s1 = SegStats.of(x[:60], y[:60])
+    s2 = SegStats.of(x[60:], y[60:])
+    m = s1.merge(s2)
+    full = SegStats.of(x, y)
+    assert abs(m.sse() - full.sse()) < 1e-6 * max(full.sse(), 1.0)
+
+
+@pytest.mark.parametrize("dist", ["logn", "uniform", "fb", "wikits"])
+def test_greedy_merging_partitions(dist, rng):
+    keys = make_keys(dist, 20000, rng)
+    n_h, bps, pieces = greedy_merging(keys, None, len(keys))
+    assert n_h == len(pieces) == len(bps)
+    # pieces tile [0, n) exactly
+    assert pieces[0][0] == 0 and pieces[-1][1] == len(keys)
+    for (a, b, *_), (c, d, *_) in zip(pieces, pieces[1:]):
+        assert b == c
+    # piece size cap (2 * omega)
+    assert max(p[1] - p[0] for p in pieces) <= 2 * 4096
+
+
+def test_bu_tree_structure(rng):
+    keys = make_keys("logn", 30000, rng)
+    bu = build_bu_tree(keys)
+    assert bu.height >= 2
+    assert len(bu.levels[-1]) == 1           # single root
+    # levels shrink monotonically
+    sizes = [len(l) for l in bu.levels]
+    assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+    # leaves tile the key range
+    leaves = bu.levels[0]
+    assert leaves[0].lo == 0 and leaves[-1].hi == len(keys)
+
+
+def test_bu_search_finds_keys(rng):
+    keys = make_keys("uniform", 20000, rng)
+    bu = build_bu_tree(keys)
+    for i in rng.integers(0, len(keys), 100):
+        pos, nodes, probes = bu_search(bu, keys, float(keys[i]))
+        assert pos == i
+    pos, _, _ = bu_search(bu, keys, float(keys[0]) - 1.0)
+    assert pos == -1
+
+
+def test_sampling_similar_layout(rng):
+    keys = make_keys("logn", 20000, rng)
+    full = build_bu_tree(keys, sample_stride=1)
+    samp = build_bu_tree(keys, sample_stride=4)
+    # appendix A.7: sampling barely changes the layout
+    assert abs(len(full.levels[0]) - len(samp.levels[0])) \
+        < 0.25 * len(full.levels[0]) + 10

@@ -1,0 +1,143 @@
+"""Host-side DILI: bulk load (Alg. 4), local opt (Alg. 5), search (Alg. 6),
+updates (Alg. 7/8) — including hypothesis property tests against a dict."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dili import (DILI, Leaf, bulk_load, collect_pairs, local_opt,
+                             phi)
+from tests.conftest import make_keys
+
+
+@pytest.fixture(scope="module", params=["logn", "uniform", "fb", "wikits"])
+def built(request):
+    rng = np.random.default_rng(7)
+    keys = make_keys(request.param, 30000, rng)
+    vals = np.arange(len(keys), dtype=np.int64)
+    return keys, vals, bulk_load(keys, vals)
+
+
+def test_all_keys_found(built):
+    keys, vals, d = built
+    rng = np.random.default_rng(8)
+    for i in rng.integers(0, len(keys), 500):
+        assert d.search(float(keys[i])) == vals[i]
+
+
+def test_absent_keys_not_found(built):
+    keys, _, d = built
+    rng = np.random.default_rng(9)
+    for i in rng.integers(0, len(keys) - 1, 200):
+        mid = (keys[i] + keys[i + 1]) / 2
+        if mid != keys[i] and mid != keys[i + 1]:
+            assert d.search(float(mid)) is None
+    assert d.search(float(keys[0]) - 1.0) is None
+    assert d.search(float(keys[-1]) + 1.0) is None
+
+
+def test_pair_conservation(built):
+    keys, _, d = built
+    st_ = d.stats()
+    assert st_["n_pairs"] == len(keys)
+
+
+def test_height_bounded(built):
+    # paper Table 6: max height 4-9 at 200M; small sets stay shallow
+    _, _, d = built
+    st_ = d.stats()
+    assert st_["max_height"] <= 12
+    assert st_["avg_height"] <= 6
+
+
+def test_range_query(built):
+    keys, vals, d = built
+    lo, hi = float(keys[100]), float(keys[160])
+    got = d.range_query(lo, hi)
+    expect = [(float(k), int(v)) for k, v in zip(keys, vals)
+              if lo <= k < hi]
+    assert got == sorted(expect)
+
+
+def test_insert_search_delete_roundtrip(built):
+    keys, _, d = built
+    rng = np.random.default_rng(10)
+    new = np.setdiff1d(np.unique(rng.uniform(keys[0], keys[-1], 2000)), keys)
+    for j, k in enumerate(new):
+        assert d.insert(float(k), 5_000_000 + j)
+    for j, k in enumerate(new):
+        assert d.search(float(k)) == 5_000_000 + j
+    # duplicate insert is a no-op
+    assert not d.insert(float(new[0]), 1)
+    for k in new[: len(new) // 2]:
+        assert d.delete(float(k))
+    for k in new[: len(new) // 2]:
+        assert d.search(float(k)) is None
+    for j, k in enumerate(new[len(new) // 2:], start=len(new) // 2):
+        assert d.search(float(k)) == 5_000_000 + j
+    assert not d.delete(float(keys[0]) - 1.0)
+
+
+def test_adjustment_triggers_and_preserves(rng):
+    keys = make_keys("logn", 5000, rng)
+    d = bulk_load(keys)
+    # hammer one region to force conflicts + adjustment (Alg. 7 lines 20-26)
+    lo, hi = float(keys[100]), float(keys[101])
+    extra = np.linspace(lo, hi, 600)[1:-1]
+    for j, k in enumerate(extra):
+        d.insert(float(k), 9_000_000 + j)
+    assert d.n_adjustments >= 1
+    for j, k in enumerate(extra):
+        assert d.search(float(k)) == 9_000_000 + j
+
+
+def test_phi_monotone_capped():
+    vals = [phi(a) for a in range(0, 40)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert max(vals) <= 4.0
+
+
+def test_dili_lo_variant(rng):
+    keys = make_keys("uniform", 8000, rng)
+    d = bulk_load(keys, local_optimized=False)
+    for i in rng.integers(0, len(keys), 300):
+        assert d.search(float(keys[i])) == i
+    st_ = d.stats()
+    # DILI-LO packs tightly: slots == pairs
+    assert st_["n_slots"] >= st_["n_pairs"]
+
+
+# ---------------------------------------------------------------------------
+# property-based: random op sequences vs a python dict (the system invariant)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "search"]),
+              st.integers(0, 400)),
+    min_size=1, max_size=120),
+    st.integers(0, 2**31 - 1))
+def test_random_ops_match_dict(ops, seed):
+    rng = np.random.default_rng(seed)
+    base = np.unique(rng.uniform(0, 1000, 300))
+    d = bulk_load(base)
+    oracle = {float(k): i for i, k in enumerate(base)}
+    universe = np.unique(np.concatenate([base, rng.uniform(0, 1000, 200)]))
+    nxt = len(base)
+    for op, ki in ops:
+        k = float(universe[ki % len(universe)])
+        if op == "insert":
+            r = d.insert(k, nxt)
+            assert r == (k not in oracle)
+            if r:
+                oracle[k] = nxt
+            nxt += 1
+        elif op == "delete":
+            r = d.delete(k)
+            assert r == (k in oracle)
+            oracle.pop(k, None)
+        else:
+            assert d.search(k) == oracle.get(k)
+    # final full validation
+    for k, v in oracle.items():
+        assert d.search(k) == v

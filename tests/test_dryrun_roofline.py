@@ -1,0 +1,65 @@
+"""Integration: the dry-run launcher on a real cell (512 fake devices,
+subprocess) + the trip-count-aware HLO walker's core invariant."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_COMPILATION_CACHE_DIR="/tmp/jaxcache")
+    env.pop("XLA_FLAGS", None)       # dryrun.py sets its own (512 devices)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "train_4k",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=840, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    row = json.load(open(tmp_path / "whisper-base_train_4k_single.json"))
+    assert row["status"] == "OK"
+    assert row["flops"] > 0
+    assert row.get("mem_peak_memory_in_bytes", 0) < 16 * 2**30
+    assert (tmp_path / "whisper-base_train_4k_single.hlo.gz").exists()
+
+
+def test_hlo_walker_multiplies_trip_counts():
+    """cost_analysis counts scan bodies once; the walker must multiply."""
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    import jax
+    import jax.numpy as jnp
+    from hlo_analysis import analyze
+
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    flops = {}
+    for L in (2, 8):
+        ws = jax.ShapeDtypeStruct((L, 256, 256), jnp.float32)
+        hlo = jax.jit(f_scan).lower(x, ws).compile().as_text()
+        r = analyze(hlo)
+        flops[L] = r["flops"]
+        # dot flops ~= L * 2*128*256*256
+        expect = L * 2 * 128 * 256 * 256
+        assert abs(r["flops"] - expect) / expect < 0.25, (L, r["flops"])
+    assert 3.0 < flops[8] / flops[2] < 5.0   # linear in trip count
+
+
+def test_roofline_model_flops_sane():
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    from roofline import model_flops, param_counts
+    total, active, cfg = param_counts("granite_8b")
+    assert 7e9 < total < 9e9           # granite-8b really has ~8B params
+    total_g, active_g, _ = param_counts("grok_1_314b")
+    assert 3.0e11 < total_g < 3.4e11   # grok ~314B
+    assert active_g < 0.45 * total_g   # top-2 of 8 experts
+    mf = model_flops("granite_8b", "train_4k")
+    # 6*N*D/chips = 6*8e9*1M/256 ~ 2e14
+    assert 1e14 < mf < 4e14

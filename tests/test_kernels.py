@@ -1,0 +1,86 @@
+"""Pallas kernel validation: interpret-mode vs ref.py oracle vs host truth,
+swept over shapes/dtypes/distributions (per the kernel-testing contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flat import flatten
+from repro.kernels import ops
+from repro.kernels.dili_search import dili_search_pallas
+from repro.kernels.ref import dili_search_ref
+from tests.conftest import make_keys
+
+
+def build(dist, n, seed=21):
+    rng = np.random.default_rng(seed)
+    keys = make_keys(dist, n, rng)
+    d, keys32 = ops.build_f32_index(keys)
+    f = flatten(d)
+    return keys32, f, ops.kernel_arrays(f)
+
+
+@pytest.mark.parametrize("dist", ["logn", "uniform", "fb", "wikits"])
+@pytest.mark.parametrize("n", [2000, 30000])
+def test_kernel_matches_truth(dist, n):
+    keys32, f, arrs = build(dist, n)
+    rng = np.random.default_rng(22)
+    qi = rng.integers(0, len(keys32), 4096)
+    q = jnp.asarray(keys32[qi], jnp.float32)
+    v, fnd = ops.dili_search(arrs, q)
+    v, fnd = np.asarray(v), np.asarray(fnd)
+    assert fnd.all()
+    assert np.array_equal(v, qi)
+
+
+@pytest.mark.parametrize("block_q", [512, 2048])
+def test_kernel_matches_ref_oracle(block_q):
+    keys32, f, arrs = build("logn", 20000)
+    rng = np.random.default_rng(23)
+    qi = rng.integers(0, len(keys32), 4096)
+    q = jnp.asarray(keys32[qi], jnp.float32)
+    vk, fk, fbk = dili_search_pallas(
+        arrs["a"], arrs["b"], arrs["base"], arrs["fo"], arrs["dense"],
+        arrs["tag"], arrs["key"], arrs["val"], arrs["root"], q,
+        max_depth=f.max_depth, interpret=True, block_q=block_q)
+    vr, fr, fbr = dili_search_ref(
+        arrs["a"], arrs["b"], arrs["base"], arrs["fo"], arrs["dense"],
+        arrs["tag"], arrs["key"], arrs["val"], arrs["root"][0], q,
+        f.max_depth)
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+    np.testing.assert_array_equal(np.asarray(fbk), np.asarray(fbr))
+
+
+def test_kernel_misses_no_false_positives():
+    keys32, f, arrs = build("uniform", 20000)
+    rng = np.random.default_rng(24)
+    qi = rng.integers(0, len(keys32) - 1, 2048)
+    mids = ((keys32[qi].astype(np.float64)
+             + keys32[qi + 1].astype(np.float64)) / 2).astype(np.float32)
+    ok = (mids != keys32[qi]) & (mids != keys32[qi + 1])
+    v, fnd = ops.dili_search(arrs, jnp.asarray(mids))
+    assert not np.asarray(fnd)[ok].any()
+
+
+def test_kernel_pads_ragged_batch():
+    keys32, f, arrs = build("logn", 5000)
+    q = jnp.asarray(keys32[:777], jnp.float32)      # not a block multiple
+    v, fnd = ops.dili_search(arrs, q)
+    assert np.asarray(fnd).all()
+    assert np.array_equal(np.asarray(v), np.arange(777))
+
+
+def test_vmem_budget_fallback_path():
+    """Oversized tables must route to the XLA path and stay correct."""
+    keys32, f, arrs = build("uniform", 30000)
+    import repro.kernels.ops as O
+    old = O.VMEM_BUDGET_BYTES
+    try:
+        O.VMEM_BUDGET_BYTES = 1   # force fallback
+        q = jnp.asarray(keys32[:1024], jnp.float32)
+        v, fnd = O.dili_search(arrs, q)
+        assert np.asarray(fnd).all()
+        assert np.array_equal(np.asarray(v), np.arange(1024))
+    finally:
+        O.VMEM_BUDGET_BYTES = old

@@ -1,0 +1,51 @@
+"""GPipe pipeline parallelism over the pod axis (subprocess, 8 devices)."""
+from tests.test_distributed import run_sub
+
+
+def test_pipeline_forward_matches_reference():
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import model as MDL
+        from repro.parallel.pipeline import pipeline_forward
+        cfg = dataclasses.replace(get_config("granite-8b").reduced(),
+                                  n_layers=4, remat="none")
+        params = MDL.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                    cfg.vocab)
+        with mesh:
+            pp = pipeline_forward(cfg, mesh, params, tokens, n_micro=4)
+        ref, _ = MDL.forward_train(params, cfg, tokens)
+        err = float(jnp.abs(pp - ref).max()) / \\
+            (float(jnp.abs(ref).max()) + 1e-9)
+        assert err < 1e-3, err
+        print("PP-OK", err)
+    """)
+    assert "PP-OK" in out
+
+
+def test_pipeline_gradients_flow():
+    out = run_sub("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import model as MDL
+        from repro.parallel.pipeline import pipeline_forward
+        cfg = dataclasses.replace(get_config("granite-8b").reduced(),
+                                  n_layers=4, remat="none")
+        params = MDL.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                    cfg.vocab)
+
+        def loss(p):
+            with mesh:
+                lg = pipeline_forward(cfg, mesh, p, tokens, n_micro=4)
+            return jnp.mean(jnp.square(lg))
+        g = jax.grad(loss)(params)
+        gn = sum(jnp.sum(jnp.square(x)) for x in
+                 jax.tree_util.tree_leaves(g))
+        assert bool(jnp.isfinite(gn)) and float(gn) > 0
+        print("PP-GRAD-OK")
+    """)
+    assert "PP-GRAD-OK" in out

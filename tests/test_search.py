@@ -1,0 +1,109 @@
+"""Batched device search (core/search.py): flat snapshot vs host truth,
+FMA-consistency regression, overlay, range queries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import search as S
+from repro.core.dili import bulk_load
+from repro.core.flat import DeltaOverlay, flatten
+from tests.conftest import make_keys
+
+
+@pytest.fixture(scope="module", params=["logn", "uniform", "fb", "wikits"])
+def snap(request):
+    rng = np.random.default_rng(11)
+    keys = make_keys(request.param, 25000, rng)
+    d = bulk_load(keys)
+    f = flatten(d)
+    return keys, d, f, S.device_arrays(f)
+
+
+def test_search_batch_hits(snap):
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(12)
+    qi = rng.integers(0, len(keys), 8192)
+    v, fnd = S.search_batch(idx, jnp.asarray(keys[qi]),
+                            max_depth=f.max_depth + 2)
+    assert bool(np.asarray(fnd).all())
+    assert np.array_equal(np.asarray(v), qi)
+
+
+def test_search_batch_misses(snap):
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(13)
+    qi = rng.integers(0, len(keys) - 1, 4096)
+    mids = (keys[qi] + keys[qi + 1]) / 2
+    ok = (mids != keys[qi]) & (mids != keys[qi + 1])
+    v, fnd = S.search_batch(idx, jnp.asarray(mids),
+                            max_depth=f.max_depth + 2)
+    assert not np.asarray(fnd)[ok].any()
+
+
+def test_fma_consistency(snap):
+    """jit vs eager must agree — regression for the FMA-contraction bug
+    (construction nudges every model off integer boundaries)."""
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(14)
+    q = jnp.asarray(keys[rng.integers(0, len(keys), 4096)])
+    v1, f1 = S.search_batch(idx, q, max_depth=f.max_depth + 2)
+    with jax.disable_jit():
+        v2, f2 = S.search_batch(idx, q, max_depth=f.max_depth + 2)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_stats_probe_counts(snap):
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(15)
+    q = jnp.asarray(keys[rng.integers(0, len(keys), 1024)])
+    v, fnd, nodes, probes = S.search_batch(idx, q, max_depth=f.max_depth + 2,
+                                           with_stats=True)
+    nodes = np.asarray(nodes)
+    assert bool(np.asarray(fnd).all())
+    assert nodes.min() >= 2 and nodes.max() <= f.max_depth + 1
+
+
+def test_overlay_lookup(snap):
+    keys, d, f, idx = snap
+    ov = DeltaOverlay.empty(1024)
+    newk = np.array([keys[0] - 5.0, keys[-1] + 5.0])
+    ov = ov.insert_batch(newk, np.array([111, 222]))
+    ova = S.overlay_arrays(ov)
+    v, fnd = S.search_with_overlay(idx, ova, jnp.asarray(newk),
+                                   max_depth=f.max_depth + 2)
+    assert bool(np.asarray(fnd).all())
+    assert list(np.asarray(v)) == [111, 222]
+    # snapshot keys still resolve through the combined path
+    v2, f2 = S.search_with_overlay(idx, ova, jnp.asarray(keys[:64]),
+                                   max_depth=f.max_depth + 2)
+    assert bool(np.asarray(f2).all())
+
+
+def test_republish_after_updates(snap):
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(16)
+    new = np.setdiff1d(np.unique(rng.uniform(keys[10], keys[-10], 500)), keys)
+    for j, k in enumerate(new):
+        d.insert(float(k), 7_000_000 + j)
+    for k in keys[:100]:
+        d.delete(float(k))
+    f2 = flatten(d)
+    idx2 = S.device_arrays(f2)
+    v, fnd = S.search_batch(idx2, jnp.asarray(new), max_depth=f2.max_depth + 2)
+    assert bool(np.asarray(fnd).all())
+    v3, f3 = S.search_batch(idx2, jnp.asarray(keys[:100]),
+                            max_depth=f2.max_depth + 2)
+    assert not np.asarray(f3).any()
+
+
+def test_range_query_batch(snap):
+    keys, d, f, idx = snap
+    lo = jnp.asarray([keys[50], keys[500]])
+    hi = jnp.asarray([keys[80], keys[520]])
+    ks, vs, counts = S.range_query_batch(idx, lo, hi, max_hits=64)
+    counts = np.asarray(counts)
+    assert counts[0] == 30 and counts[1] == 20
+    got = np.asarray(ks[0])[:30]
+    assert np.array_equal(got, keys[50:80])
