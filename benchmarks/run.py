@@ -311,6 +311,58 @@ def fig10_shift():
             f"avg_h:{h0:.2f}->{s['avg_height']:.2f};adj={s['adjustments']}")
 
 
+def online_mixed():
+    """Mixed read/write workloads through the online-update subsystem:
+    fused snapshot+overlay lookups, overlay writes, merge-policy publishes.
+    Reports lookups/s, writes/s, and publish stalls (merge count + wall s)."""
+    print("# online: mixed read/write (lookup/insert/delete) workloads")
+    import time as _t
+    from repro.online import MergePolicy, OnlineIndex
+    for name in DATASETS:
+        keys = dataset(name)
+        half = keys[::2]
+        other = np.setdiff1d(keys, half)
+        rng = np.random.default_rng(12)
+        for wl, read_frac in (("95r5w", 0.95), ("50r50w", 0.50)):
+            oi = OnlineIndex(half, sample_stride=4, overlay_cap=8192,
+                             policy=MergePolicy(max_fill=0.5,
+                                                max_writes=16384))
+            B, n_rounds = 4096, 16
+            n_reads = n_writes = 0
+            t_read = t_write = 0.0
+            inserted: list = []
+            wi = 0
+            # warmup: trace/compile the fused lookup outside the timed window
+            oi.lookup(jnp.asarray(half[:B]))
+            for _ in range(n_rounds):
+                q = jnp.asarray(half[rng.integers(0, len(half), B)])
+                t0 = _t.perf_counter()
+                v, f = oi.lookup(q)
+                t_read += _t.perf_counter() - t0
+                n_reads += B
+                nw = int(round(B * (1 - read_frac) / read_frac))
+                ups = other[wi % len(other): wi % len(other) + (2 * nw) // 3]
+                wi += len(ups)
+                dels = inserted[: nw - len(ups)]
+                inserted = inserted[len(dels):]
+                t0 = _t.perf_counter()
+                if len(ups):
+                    oi.upsert_batch(ups, 1_000_000 + np.arange(len(ups)))
+                    inserted.extend(ups)
+                if len(dels):
+                    oi.delete_batch(np.asarray(dels))
+                t_write += _t.perf_counter() - t0
+                n_writes += len(ups) + len(dels)
+            stall_s = sum(st.publish_s for st in oi.store.history[1:])
+            csv_row(f"online,{name},{wl},lookups_per_s",
+                    n_reads / max(t_read, 1e-9))
+            csv_row(f"online,{name},{wl},writes_per_s",
+                    n_writes / max(t_write, 1e-9))
+            csv_row(f"online,{name},{wl},publish_stalls", oi.n_merges,
+                    f"stall_s={stall_s:.3f};epochs={oi.epoch};"
+                    f"reasons={dict(oi.merge_reasons)}")
+
+
 def kernel_bench():
     """Pallas kernel (interpret) vs pure-XLA batched search + bytes/query."""
     print("# kernel: dili_search")
@@ -343,7 +395,8 @@ def kernel_bench():
 
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
-       table10_12_13_appendix, fig9_scale, fig10_shift, kernel_bench]
+       table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
+       kernel_bench]
 
 
 def main() -> None:

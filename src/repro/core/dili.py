@@ -328,8 +328,8 @@ class DILI:
 
     def _insert_to_leaf(self, leaf: Leaf, key: float, val: int) -> bool:
         if leaf.dense:
-            _dense_leaf_insert(leaf, key, val)
-            return True
+            # returns False on a duplicate so upsert() knows to _set_payload
+            return _dense_leaf_insert(leaf, key, val)
         pos = leaf.predict(key)
         p = leaf.slots[pos]
         not_exist = True
@@ -368,6 +368,33 @@ class DILI:
                 leaf.delta / leaf.omega > self.lam * leaf.kappa:
             self.adjust_leaf(leaf)
         return not_exist
+
+    def upsert(self, key: float, val: int) -> bool:
+        """Insert (Alg. 7) or, when the key already exists, replace its
+        payload in place.  Returns True if the key was newly inserted."""
+        if self.insert(key, val):
+            return True
+        self._set_payload(key, val)
+        return False
+
+    def _set_payload(self, x: float, val: int) -> bool:
+        node, _ = self.locate_leaf(x)
+        while True:
+            if node.dense:
+                for i, s in enumerate(node.slots[: node.omega]):
+                    if s is not None and s[0] == x:
+                        node.slots[i] = (x, val)
+                        return True
+                return False
+            pos = node.predict(x)
+            p = node.slots[pos] if node.fo else None
+            if isinstance(p, Leaf):
+                node = p
+            elif p is not None and p[0] == x:
+                node.slots[pos] = (x, val)
+                return True
+            else:
+                return False
 
     def adjust_leaf(self, leaf: Leaf) -> None:
         self.n_adjustments += 1
@@ -502,13 +529,14 @@ def _dense_leaf_search_stats(leaf: Leaf, x: float):
     return None, probes
 
 
-def _dense_leaf_insert(leaf: Leaf, key: float, val: int) -> None:
-    """B+Tree-style shifted insert (what DILI *avoids*; kept for DILI-LO)."""
+def _dense_leaf_insert(leaf: Leaf, key: float, val: int) -> bool:
+    """B+Tree-style shifted insert (what DILI *avoids*; kept for DILI-LO).
+    Returns True iff the key was newly inserted."""
     pairs = [s for s in leaf.slots[:leaf.omega] if s is not None]
     import bisect
     i = bisect.bisect_left([p[0] for p in pairs], key)
     if i < len(pairs) and pairs[i][0] == key:
-        return
+        return False
     pairs.insert(i, (key, val))
     leaf.slots = pairs
     leaf.omega = len(pairs)
@@ -516,6 +544,7 @@ def _dense_leaf_insert(leaf: Leaf, key: float, val: int) -> None:
     ks = np.array([p[0] for p in pairs], np.float64)
     if len(pairs) >= 2:
         leaf.a, leaf.b = least_squares(ks, np.arange(len(pairs), dtype=np.float64))
+    return True
 
 
 def _dense_leaf_delete(leaf: Leaf, key: float) -> bool:

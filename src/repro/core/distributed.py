@@ -17,12 +17,20 @@ Two lookup strategies:
 
 Shard snapshots are padded to identical shapes so the whole index stacks into
 leading-axis-sharded arrays -- republish never re-traces.
+
+Online updates (DESIGN.md section 8): each shard owns a private tombstone
+overlay absorbing the writes routed to its key range.  A merge folds ONE
+shard's overlay through that shard's host DILI (Alg. 7/8), re-flattens only
+that shard, and rewrites its rows of the stacked tables in place — no global
+rebuild; the stack only re-pads when a shard outgrows the shared pow2 shape.
+Reads between merges resolve the (globally sorted, because shard ranges are
+disjoint) combined overlay on top of the sharded snapshot lookup.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
@@ -38,10 +46,18 @@ from . import search as S
 
 @dataclass
 class ShardedDILI:
-    idx: dict              # stacked device arrays, leading dim = shard
+    idx: dict              # stacked host arrays, leading dim = shard
     boundaries: np.ndarray  # [R+1] range boundaries (replicated)
     n_shards: int
     max_depth: int
+    # online-update state (None when built with keep_host=False)
+    flats: list | None = None      # per-shard FlatDILI (current epoch)
+    dilis: list | None = None      # per-shard host DILI writers
+    overlays: list | None = None   # per-shard TombstoneOverlay
+    epoch: int = 0
+    # device mirror of the combined overlay, keyed by dtype name;
+    # invalidated by every write/merge
+    _ov_cache: dict = field(default_factory=dict, repr=False)
 
 
 def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
@@ -50,27 +66,10 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
     return out
 
 
-def build_sharded(keys: np.ndarray, vals: np.ndarray | None, n_shards: int,
-                  cm: CostModel = DEFAULT_COST, sample_stride: int = 1,
-                  **kw) -> ShardedDILI:
-    keys = np.asarray(keys, np.float64)
-    n = len(keys)
-    if vals is None:
-        vals = np.arange(n, dtype=np.int64)
-    # quantile partitioning: equal #keys per shard (balanced memory/work)
-    cuts = [0] + [round(n * (i + 1) / n_shards) for i in range(n_shards)]
-    flats: list[FlatDILI] = []
-    for r in range(n_shards):
-        lo, hi = cuts[r], cuts[r + 1]
-        d = bulk_load(keys[lo:hi], vals[lo:hi], cm=cm,
-                      sample_stride=sample_stride, **kw)
-        flats.append(flatten(d))
-    boundaries = np.concatenate([[ -np.inf ],
-                                 [keys[cuts[r]] for r in range(1, n_shards)],
-                                 [np.inf]])
+def _stack_flats(flats: list[FlatDILI]) -> dict:
     n_nodes = 1 << max(1, math.ceil(math.log2(max(f.n_nodes for f in flats))))
     n_slots = 1 << max(1, math.ceil(math.log2(max(f.n_slots for f in flats))))
-    stack = dict(
+    return dict(
         a=np.stack([_pad_to(f.a, n_nodes, 0.0) for f in flats]),
         b=np.stack([_pad_to(f.b, n_nodes, 0.0) for f in flats]),
         base=np.stack([_pad_to(f.base, n_nodes, 0) for f in flats]),
@@ -78,13 +77,44 @@ def build_sharded(keys: np.ndarray, vals: np.ndarray | None, n_shards: int,
         dense=np.stack([_pad_to(f.dense, n_nodes, 0) for f in flats]),
         tag=np.stack([_pad_to(f.tag, n_slots, 0) for f in flats]),
         key=np.stack([_pad_to(f.key, n_slots, 0.0) for f in flats]),
-        val=np.stack([_pad_to(f.val.astype(np.int32), n_slots, -1)
-                      for f in flats]),
+        # int64 payloads end-to-end (int32 wrapped payloads above 2^31)
+        val=np.stack([_pad_to(f.val, n_slots, -1) for f in flats]),
         root=np.array([f.root for f in flats], np.int32),
     )
+
+
+def build_sharded(keys: np.ndarray, vals: np.ndarray | None, n_shards: int,
+                  cm: CostModel = DEFAULT_COST, sample_stride: int = 1,
+                  keep_host: bool = True, overlay_cap: int = 4096,
+                  **kw) -> ShardedDILI:
+    from ..online.overlay import TombstoneOverlay
+    keys = np.asarray(keys, np.float64)
+    n = len(keys)
+    if vals is None:
+        vals = np.arange(n, dtype=np.int64)
+    # quantile partitioning: equal #keys per shard (balanced memory/work)
+    cuts = [0] + [round(n * (i + 1) / n_shards) for i in range(n_shards)]
+    flats: list[FlatDILI] = []
+    dilis: list = []
+    for r in range(n_shards):
+        lo, hi = cuts[r], cuts[r + 1]
+        d = bulk_load(keys[lo:hi], vals[lo:hi], cm=cm,
+                      sample_stride=sample_stride, **kw)
+        dilis.append(d)
+        flats.append(flatten(d))
+    boundaries = np.concatenate([[ -np.inf ],
+                                 [keys[cuts[r]] for r in range(1, n_shards)],
+                                 [np.inf]])
+    stack = _stack_flats(flats)
     max_depth = max(f.max_depth for f in flats) + 2
-    return ShardedDILI(idx=stack, boundaries=boundaries, n_shards=n_shards,
-                       max_depth=max_depth)
+    sd = ShardedDILI(idx=stack, boundaries=boundaries, n_shards=n_shards,
+                     max_depth=max_depth)
+    if keep_host:
+        sd.flats = flats
+        sd.dilis = dilis
+        sd.overlays = [TombstoneOverlay.empty(overlay_cap)
+                       for _ in range(n_shards)]
+    return sd
 
 
 def to_mesh(sd: ShardedDILI, mesh: Mesh, axis: str = "data",
@@ -181,3 +211,122 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
                        out_specs=(P(axis), P(axis), P(axis)))
         return fn(sd_arrays, bounds, queries)
     raise ValueError(strategy)
+
+
+# ---------------------------------------------------------------------------
+# Online updates: per-shard overlays, single-shard merge, fused read path
+# ---------------------------------------------------------------------------
+
+
+def shard_of(sd: ShardedDILI, keys: np.ndarray) -> np.ndarray:
+    """Route keys to shards: the boundary array is the root 'internal node'."""
+    return np.clip(np.searchsorted(sd.boundaries, keys, side="right") - 1,
+                   0, sd.n_shards - 1)
+
+
+def _require_host(sd: ShardedDILI) -> None:
+    if sd.overlays is None:
+        raise ValueError("build_sharded(..., keep_host=True) required for "
+                         "online updates")
+
+
+def sharded_upsert(sd: ShardedDILI, keys, vals) -> None:
+    _require_host(sd)
+    keys = np.atleast_1d(np.asarray(keys, np.float64))
+    vals = np.atleast_1d(np.asarray(vals, np.int64))
+    dest = shard_of(sd, keys)
+    for r in np.unique(dest):
+        m = dest == r
+        sd.overlays[r] = sd.overlays[r].upsert_batch(keys[m], vals[m])
+    sd._ov_cache.clear()
+
+
+def sharded_delete(sd: ShardedDILI, keys) -> None:
+    _require_host(sd)
+    keys = np.atleast_1d(np.asarray(keys, np.float64))
+    dest = shard_of(sd, keys)
+    for r in np.unique(dest):
+        m = dest == r
+        sd.overlays[r] = sd.overlays[r].delete_batch(keys[m])
+    sd._ov_cache.clear()
+
+
+def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0) -> list[int]:
+    """Fold each shard whose overlay full_fraction exceeds `max_fill` through
+    its host DILI (Alg. 7/8), re-flatten ONLY those shards, and rewrite their
+    rows of the stacked tables in place.  The stack is re-padded (bigger pow2)
+    only when a merged shard outgrows the shared shape.  Returns merged shard
+    ids; bumps `sd.epoch` when any merged.
+
+    NOTE: only the HOST stack (`sd.idx`) is rewritten, and the merged
+    overlays are cleared — device copies from a prior `to_mesh()` no longer
+    see the folded writes.  Callers must republish (`to_mesh(sd, mesh)`)
+    before serving lookups whenever this returns a non-empty list."""
+    from ..online.overlay import TombstoneOverlay, fold_overlay
+    _require_host(sd)
+    merged: list[int] = []
+    for r, ov in enumerate(sd.overlays):
+        if ov.count == 0 or ov.full_fraction < max_fill:
+            continue
+        fold_overlay(sd.dilis[r], ov)
+        sd.flats[r] = flatten(sd.dilis[r])
+        sd.overlays[r] = TombstoneOverlay.empty(ov.cap)
+        merged.append(r)
+    if not merged:
+        return merged
+    sd._ov_cache.clear()
+    n_nodes = sd.idx["a"].shape[1]
+    n_slots = sd.idx["tag"].shape[1]
+    if any(sd.flats[r].n_nodes > n_nodes or sd.flats[r].n_slots > n_slots
+           for r in merged):
+        sd.idx = _stack_flats(sd.flats)      # grow: re-pad every shard
+    else:
+        for r in merged:                     # steady state: row rewrite only
+            f = sd.flats[r]
+            sd.idx["a"][r] = _pad_to(f.a, n_nodes, 0.0)
+            sd.idx["b"][r] = _pad_to(f.b, n_nodes, 0.0)
+            sd.idx["base"][r] = _pad_to(f.base, n_nodes, 0)
+            sd.idx["fo"][r] = _pad_to(f.fo, n_nodes, 1)
+            sd.idx["dense"][r] = _pad_to(f.dense, n_nodes, 0)
+            sd.idx["tag"][r] = _pad_to(f.tag, n_slots, 0)
+            sd.idx["key"][r] = _pad_to(f.key, n_slots, 0.0)
+            sd.idx["val"][r] = _pad_to(f.val, n_slots, -1)
+            sd.idx["root"][r] = f.root
+    sd.max_depth = max(f.max_depth for f in sd.flats) + 2
+    sd.epoch += 1
+    return merged
+
+
+def combined_overlay_arrays(sd: ShardedDILI, dtype=jnp.float64) -> dict:
+    """One globally sorted overlay view: shard key ranges are disjoint, so
+    concatenating per-shard populated prefixes in shard order IS sorted.
+    Cached per dtype; writes and merges invalidate."""
+    _require_host(sd)
+    ckey = np.dtype(dtype).name
+    hit = sd._ov_cache.get(ckey)
+    if hit is not None:
+        return hit
+    parts = [ov.entries() for ov in sd.overlays]
+    ks = np.concatenate([p[0] for p in parts])
+    vs = np.concatenate([p[1] for p in parts])
+    tb = np.concatenate([p[2] for p in parts])
+    cap = 1 << max(1, math.ceil(math.log2(max(len(ks), 1))))
+    out = dict(keys=jnp.asarray(_pad_to(ks, cap, np.inf), dtype),
+               vals=jnp.asarray(_pad_to(vs, cap, 0), jnp.int64),
+               tomb=jnp.asarray(_pad_to(tb, cap, 0), jnp.int8))
+    sd._ov_cache[ckey] = out
+    return out
+
+
+def sharded_lookup_with_overlay(mesh: Mesh, sd_arrays: dict,
+                                sd: ShardedDILI, queries: jnp.ndarray,
+                                max_depth: int, axis: str = "data",
+                                strategy: str = "gather"):
+    """Sharded snapshot lookup + fused overlay resolution (replicated
+    combined overlay over the sharded results)."""
+    out = sharded_lookup(mesh, sd_arrays, queries, max_depth, axis=axis,
+                         strategy=strategy)
+    v, f = out[0], out[1]
+    ova = combined_overlay_arrays(sd, sd_arrays["boundaries"].dtype)
+    v, f = S.resolve_overlay(ova, queries, v, f)
+    return (v, f) + tuple(out[2:])

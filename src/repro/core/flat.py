@@ -18,7 +18,9 @@ Internal nodes are just nodes whose slots are all CHILD — search over the
 whole tree (Alg. 6) collapses into ONE loop (search.py).
 
 A sorted *delta overlay* (LSM-style) absorbs freshly inserted keys between
-snapshot publishes; `merge_overlay` folds it back through the host structure.
+snapshot publishes.  `DeltaOverlay` below is the insert-only sketch; the full
+tombstone-capable overlay + epoch/merge lifecycle lives in `repro.online`
+(DESIGN.md section 8).
 """
 
 from __future__ import annotations

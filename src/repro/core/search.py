@@ -60,7 +60,10 @@ def device_arrays(flat: FlatDILI, dtype=jnp.float64, pad: bool = True) -> dict:
         dense=jnp.asarray(conv(f.dense, 0), jnp.int8),
         tag=jnp.asarray(conv(f.tag, TAG_EMPTY), jnp.int8),
         key=jnp.asarray(conv(f.key, 0.0), dtype),
-        val=jnp.asarray(conv(f.val, -1), jnp.int32),
+        # payloads keep the snapshot's int64 width — serving payloads (KV slot
+        # ids, document offsets) may exceed 2^31 (requires x64; under x32 jax
+        # silently narrows, matching the f32 kernel path)
+        val=jnp.asarray(conv(f.val, -1), jnp.int64),
         root=jnp.int32(f.root),
         max_depth=jnp.int32(f.max_depth),
     )
@@ -104,13 +107,13 @@ def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int = 24,
         miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & step_active
         val = jnp.where(hit, sv, val)
         found = found | hit
-        n = jnp.where(is_child, sv, n)
+        n = jnp.where(is_child, sv.astype(jnp.int32), n)
         done = done | hit | miss | (is_dense & ~done)
         nodes = nodes + step_active.astype(jnp.int32)
         probes = probes + step_active.astype(jnp.int32)
         return (n, done, val, found, nodes, probes), None
 
-    init = (n0, zb, zi - 1, zb, zi, zi)
+    init = (n0, zb, (zi - 1).astype(idx["val"].dtype), zb, zi, zi)
     (n, done, val, found, nodes, probes), _ = jax.lax.scan(
         body, init, None, length=max_depth)
 
@@ -189,8 +192,10 @@ def _dense_search(idx: dict, q: jnp.ndarray, n: jnp.ndarray):
 
 
 def overlay_arrays(ov: DeltaOverlay, dtype=jnp.float64) -> dict:
+    # vals stay int64: overlay payloads must round-trip the same width as the
+    # snapshot's (int32 silently wrapped payloads above 2^31)
     return dict(keys=jnp.asarray(ov.keys, dtype),
-                vals=jnp.asarray(ov.vals, jnp.int32))
+                vals=jnp.asarray(ov.vals, jnp.int64))
 
 
 @jax.jit
@@ -201,12 +206,27 @@ def overlay_lookup(ov: dict, queries: jnp.ndarray):
     return ov["vals"][i], found
 
 
+def resolve_overlay(ov: dict, queries: jnp.ndarray, snap_vals: jnp.ndarray,
+                    snap_found: jnp.ndarray):
+    """Fuse overlay state over snapshot results: an overlay hit wins, and an
+    overlay tombstone (``ov["tomb"][i] != 0``) hides a snapshot hit.  `ov`
+    without a "tomb" entry behaves as the legacy insert-only overlay."""
+    i = jnp.clip(jnp.searchsorted(ov["keys"], queries),
+                 0, len(ov["keys"]) - 1)
+    hit = ov["keys"][i] == queries
+    tomb = ov.get("tomb")
+    dead = hit & (tomb[i] > 0) if tomb is not None else hit & False
+    live = hit & ~dead
+    val = jnp.where(live, ov["vals"][i], snap_vals)
+    return val, live | (snap_found & ~dead)
+
+
 def search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
                         max_depth: int = 24):
-    """Overlay (recent writes) wins over the snapshot."""
+    """Overlay (recent writes) wins over the snapshot; tombstones hide
+    snapshot hits (DESIGN.md section 8)."""
     v0, f0 = search_batch(idx, queries, max_depth)
-    v1, f1 = overlay_lookup(ov, queries)
-    return jnp.where(f1, v1, v0), f0 | f1
+    return resolve_overlay(ov, queries, v0, f0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,22 @@
+"""Epoch-based online-update subsystem (DESIGN.md section 8).
+
+Owns the full update lifecycle between the mutable host DILI (writer) and
+the immutable device snapshot (reader):
+
+  * `overlay`  — tombstone-capable sorted run absorbing upserts/deletes,
+    with a fused snapshot+overlay device lookup;
+  * `epoch`    — epoch-versioned double-buffered snapshot publisher;
+  * `merge`    — merge policy (fill / lag / λ-pressure / flush) folding the
+    overlay through Algorithms 7-8, and the `OnlineIndex` facade.
+"""
+
+from .overlay import (LIVE, TOMBSTONE, TombstoneOverlay, fold_overlay,
+                      overlay_device_arrays, search_with_updates)
+from .epoch import EpochStats, SnapshotStore
+from .merge import MergePolicy, OnlineIndex, adjust_pressure
+
+__all__ = [
+    "LIVE", "TOMBSTONE", "TombstoneOverlay", "fold_overlay",
+    "overlay_device_arrays", "search_with_updates", "EpochStats",
+    "SnapshotStore", "MergePolicy", "OnlineIndex", "adjust_pressure",
+]

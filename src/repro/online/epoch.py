@@ -1,0 +1,100 @@
+"""Epoch-versioned snapshot publisher (DESIGN.md section 8).
+
+`SnapshotStore` owns the immutable device snapshots the read path serves
+from.  Publishing is double-buffered: epoch N+1's arrays are built and
+uploaded into the *back* buffer while epoch N keeps serving from the front
+buffer, then a single reference flip makes N+1 current.  Because snapshots
+are immutable jax arrays, a reader that captured epoch N's dict mid-batch
+keeps a consistent view even after the flip — the flip only retargets new
+readers.
+
+Shapes are padded to powers of two (`core.search.device_arrays(pad=True)`),
+so a republish re-traces the compiled search executable only when a table
+crosses a pow2 boundary; `EpochStats.retraced` records when that happened.
+Per-epoch stats also record overlay fill and merge lag at publish time and
+bytes uploaded — the observability surface for tuning `MergePolicy`.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..core import search as S
+from ..core.flat import FlatDILI
+
+
+@dataclass(frozen=True)
+class EpochStats:
+    epoch: int
+    n_keys: int              # pairs in the snapshot
+    n_nodes: int             # unpadded node-table rows
+    n_slots: int             # unpadded slot-table rows
+    bytes_uploaded: int      # device bytes of this epoch's tables
+    overlay_fill: float      # overlay full_fraction at publish time
+    merge_lag: int           # writes absorbed since the previous publish
+    publish_s: float         # wall time: upload + block_until_ready
+    retraced: bool           # padded shapes changed vs previous epoch
+
+
+@dataclass
+class SnapshotStore:
+    dtype: object = jnp.float64
+    pad: bool = True
+    epoch: int = 0
+    history: list = field(default_factory=list)
+    _buf: list = field(default_factory=lambda: [None, None])  # (flat, idx)
+    _active: int = -1
+
+    # -- read side -----------------------------------------------------------
+
+    @property
+    def flat(self) -> FlatDILI:
+        return self._buf[self._active][0]
+
+    @property
+    def idx(self) -> dict:
+        """The current epoch's device arrays (immutable; safe to capture)."""
+        return self._buf[self._active][1]
+
+    @property
+    def max_depth(self) -> int:
+        return self.flat.max_depth
+
+    @property
+    def stats(self) -> EpochStats:
+        return self.history[-1]
+
+    # -- write side ----------------------------------------------------------
+
+    def publish(self, flat: FlatDILI, *, overlay_fill: float = 0.0,
+                merge_lag: int = 0) -> EpochStats:
+        """Upload `flat` into the back buffer, flip, bump the epoch."""
+        t0 = time.perf_counter()
+        idx = S.device_arrays(flat, self.dtype, pad=self.pad)
+        jax.block_until_ready(idx)
+        publish_s = time.perf_counter() - t0
+
+        back = 1 - self._active if self._active >= 0 else 0
+        retraced = True
+        if self._active >= 0:
+            prev = self._buf[self._active][1]
+            retraced = any(prev[k].shape != idx[k].shape
+                           for k in ("a", "tag"))
+        self._buf[back] = (flat, idx)
+        self._active = back            # the flip: new readers see epoch N+1
+        self.epoch += 1
+
+        n_pairs = int((flat.tag == 1).sum())
+        st = EpochStats(
+            epoch=self.epoch, n_keys=n_pairs,
+            n_nodes=flat.n_nodes, n_slots=flat.n_slots,
+            bytes_uploaded=sum(int(v.nbytes) for v in idx.values()
+                               if hasattr(v, "nbytes")),
+            overlay_fill=overlay_fill, merge_lag=merge_lag,
+            publish_s=publish_s, retraced=retraced)
+        self.history.append(st)
+        return st

@@ -1,0 +1,204 @@
+"""Merge policy + the OnlineIndex facade (DESIGN.md section 8).
+
+The merge is the only place writes cross the writer/reader boundary: the
+overlay is folded through the host DILI with the paper's own machinery —
+upserts via Algorithm 7 (insert, with the λ-triggered node adjustment of
+lines 20-26), tombstones via Algorithm 8 (delete) — then ONE `flatten()`
+produces the next epoch's snapshot and `SnapshotStore.publish` flips it in.
+Between merges the read path serves snapshot+overlay fused lookups, so
+results are exact at every point in time.
+
+Merge triggers (`MergePolicy.should_merge`):
+  * `max_fill`      — overlay `full_fraction` reached (bounded write buffer);
+  * `max_writes`    — merge lag: writes absorbed since the last publish
+                      (bounds staleness-repair cost, BLI-style);
+  * adjustment pressure — a λ-style per-leaf trigger: if any single host leaf
+    has pending writes exceeding `pressure_lambda ×` its current pair count,
+    merging early lets Algorithm 7's adjustment re-spread that region instead
+    of letting the overlay degenerate into a hot sorted run;
+  * explicit `flush()`.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dili import DILI, LAMBDA, bulk_load
+from ..core.flat import flatten
+from .epoch import EpochStats, SnapshotStore
+from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
+                      overlay_device_arrays, search_with_updates)
+
+
+@dataclass(frozen=True)
+class MergePolicy:
+    max_fill: float = 0.5          # overlay full_fraction trigger
+    max_writes: int = 4096         # merge-lag trigger (writes since publish)
+    pressure_lambda: float = LAMBDA  # per-leaf pending/omega trigger
+    pressure_check_every: int = 256  # amortize the host-side leaf walk
+
+
+def adjust_pressure(dili: DILI, ov: TombstoneOverlay) -> float:
+    """max over host leaves of pending-writes / current-pairs — the overlay
+    analogue of Alg. 7's Δ/Ω > λκ adjustment test."""
+    if ov.count == 0:
+        return 0.0
+    keys, _, _ = ov.entries()
+    hits: Counter = Counter()
+    omega: dict[int, int] = {}
+    for k in keys:
+        leaf, _ = dili.locate_leaf(float(k))
+        lid = id(leaf)
+        hits[lid] += 1
+        omega[lid] = leaf.omega
+    return max(c / max(omega[lid], 1) for lid, c in hits.items())
+
+
+class OnlineIndex:
+    """Snapshot + overlay + merge lifecycle behind one read/write API.
+
+    Writes land in the (host) tombstone overlay; reads run the fused
+    snapshot+overlay device lookup; the merge policy decides when to fold the
+    overlay through the host DILI and publish a fresh epoch.  `flatten()` runs
+    exactly once per merge — never per write.
+    """
+
+    def __init__(self, keys=None, vals=None, *, dili: DILI | None = None,
+                 policy: MergePolicy | None = None, overlay_cap: int = 4096,
+                 dtype=jnp.float64, **bulk_kw):
+        if dili is None:
+            dili = bulk_load(np.asarray(keys, np.float64), vals, **bulk_kw)
+        self.dili = dili
+        self.policy = policy or MergePolicy()
+        self.store = SnapshotStore(dtype=dtype)
+        self.overlay = TombstoneOverlay.empty(overlay_cap)
+        self._overlay_cap0 = self.overlay.cap
+        self._ov_arrays: dict | None = None     # device mirror cache
+        self._writes_since_publish = 0
+        self._writes_since_pressure = 0
+        # incremental λ-pressure state: between merges the host DILI is never
+        # mutated (writes only touch the overlay), so leaf identities are
+        # stable and each written key needs locating exactly once
+        self._leaf_hits: Counter = Counter()    # id(leaf) -> pending writes
+        self._leaf_omega: dict[int, int] = {}   # id(leaf) -> omega
+        self._unlocated_keys: list[float] = []  # written since last check
+        self.n_flattens = 0
+        self.n_merges = 0
+        self.merge_reasons: Counter = Counter()
+        self._publish()
+
+    # -- write path ----------------------------------------------------------
+
+    def upsert(self, key: float, val: int) -> None:
+        self.upsert_batch([key], [val])
+
+    def upsert_batch(self, keys, vals) -> None:
+        self.overlay = self.overlay.upsert_batch(keys, vals)
+        self._unlocated_keys.extend(np.atleast_1d(keys).tolist())
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def delete(self, key: float) -> None:
+        self.delete_batch([key])
+
+    def delete_batch(self, keys) -> None:
+        self.overlay = self.overlay.delete_batch(keys)
+        self._unlocated_keys.extend(np.atleast_1d(keys).tolist())
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def _note_writes(self, n: int) -> None:
+        self._ov_arrays = None
+        self._writes_since_publish += n
+        self._writes_since_pressure += n
+        reason = self.should_merge()
+        if reason:
+            self.merge(reason)
+
+    # -- merge trigger -------------------------------------------------------
+
+    def should_merge(self) -> str | None:
+        p = self.policy
+        if self.overlay.full_fraction >= p.max_fill:
+            return "fill"
+        if self._writes_since_publish >= p.max_writes:
+            return "lag"
+        if self._writes_since_pressure >= p.pressure_check_every:
+            self._writes_since_pressure = 0
+            if self._incremental_pressure() > p.pressure_lambda:
+                return "pressure"
+        return None
+
+    def _incremental_pressure(self) -> float:
+        """λ-pressure over O(writes since last check) tree walks, not the
+        whole overlay (duplicate writes to one key count once per write —
+        a slight overestimate that only merges a hot region earlier)."""
+        for k in self._unlocated_keys:
+            leaf, _ = self.dili.locate_leaf(float(k))
+            lid = id(leaf)
+            self._leaf_hits[lid] += 1
+            self._leaf_omega[lid] = leaf.omega
+        self._unlocated_keys.clear()
+        if not self._leaf_hits:
+            return 0.0
+        return max(c / max(self._leaf_omega[lid], 1)
+                   for lid, c in self._leaf_hits.items())
+
+    def flush(self) -> EpochStats:
+        """Explicit merge+publish; with an empty overlay nothing is folded or
+        republished and the current epoch's stats are returned."""
+        return self.merge("flush")
+
+    def merge(self, reason: str = "explicit") -> EpochStats:
+        """Fold the overlay through the host DILI (Alg. 7/8) and publish."""
+        if self.overlay.count == 0:    # nothing pending: keep current epoch
+            return self.store.stats
+        fold_overlay(self.dili, self.overlay)
+        fill = self.overlay.full_fraction
+        self.overlay = TombstoneOverlay.empty(self._overlay_cap0)
+        self._ov_arrays = None
+        self._leaf_hits.clear()         # merge mutates the tree: leaf ids
+        self._leaf_omega.clear()        # and omegas are stale now
+        self._unlocated_keys.clear()
+        self.n_merges += 1
+        self.merge_reasons[reason] += 1
+        return self._publish(overlay_fill=fill)
+
+    def _publish(self, overlay_fill: float = 0.0) -> EpochStats:
+        flat = flatten(self.dili)      # the ONE flatten per epoch
+        self.n_flattens += 1
+        st = self.store.publish(flat, overlay_fill=overlay_fill,
+                                merge_lag=self._writes_since_publish)
+        self._writes_since_publish = 0
+        self._writes_since_pressure = 0
+        return st
+
+    # -- read path -----------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.store.epoch
+
+    def _overlay_arrays(self) -> dict:
+        if self._ov_arrays is None:
+            self._ov_arrays = overlay_device_arrays(self.overlay,
+                                                    self.store.dtype)
+        return self._ov_arrays
+
+    def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
+        """Batched fused snapshot+overlay lookup -> (vals, found)."""
+        q = jnp.asarray(queries, self.store.dtype)
+        v, f = search_with_updates(self.store.idx, self._overlay_arrays(), q,
+                                   max_depth=self.store.max_depth + 2)
+        return np.asarray(v), np.asarray(f)
+
+    def get(self, key: float) -> int | None:
+        """Host-side exact point read (overlay state wins)."""
+        state, v = self.overlay.get(float(key))
+        if state == LIVE:
+            return v
+        if state == TOMBSTONE:
+            return None
+        return self.dili.search(float(key))

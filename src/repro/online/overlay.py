@@ -1,0 +1,151 @@
+"""Tombstone-capable delta overlay: the write buffer of the online-update
+subsystem (DESIGN.md section 8).
+
+A `TombstoneOverlay` is an immutable sorted run of pending writes — upserts
+AND deletes — sitting in front of an immutable device snapshot, LSM-style
+(PGM-index's snapshot+delta composition; BLI's buffered write path).  Each
+entry is (key, val, tomb): `tomb != 0` marks a delete of a key that may still
+exist in the snapshot.  Semantics:
+
+  * last-write-wins: applying a batch dedupes by key keeping the newest
+    entry, so upsert-then-delete leaves a tombstone and delete-then-upsert
+    leaves a live pair;
+  * capacity doubling: the backing arrays grow by powers of two, so the
+    padded device mirror only changes shape (and re-traces the fused lookup)
+    on a doubling, never on a plain write;
+  * reads resolve overlay-hit / overlay-tombstone / snapshot-hit in one
+    fused jitted pass (`search_with_updates`), reusing
+    `core.search.search_batch` for the snapshot side.
+
+The structure is persistent (every write returns a new overlay) so a reader
+holding epoch N's overlay mirror is never invalidated mid-lookup.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import search as S
+
+LIVE, TOMBSTONE = 0, 1
+
+
+@dataclass(frozen=True)
+class TombstoneOverlay:
+    keys: np.ndarray    # f64 [cap], padded with +inf
+    vals: np.ndarray    # i64 [cap]
+    tomb: np.ndarray    # i8  [cap], 1 = tombstone
+    count: int
+    cap: int
+
+    @staticmethod
+    def empty(cap: int = 4096) -> "TombstoneOverlay":
+        cap = max(int(cap), 1)
+        return TombstoneOverlay(np.full(cap, np.inf),
+                                np.zeros(cap, np.int64),
+                                np.zeros(cap, np.int8), 0, cap)
+
+    # -- writes (persistent: return a new overlay) --------------------------
+
+    def _apply(self, k: np.ndarray, v: np.ndarray,
+               t: np.ndarray) -> "TombstoneOverlay":
+        nk = np.concatenate([self.keys[: self.count], np.asarray(k, np.float64)])
+        nv = np.concatenate([self.vals[: self.count], np.asarray(v, np.int64)])
+        nt = np.concatenate([self.tomb[: self.count], np.asarray(t, np.int8)])
+        if len(nk) == 0:
+            return self
+        order = np.argsort(nk, kind="stable")
+        nk, nv, nt = nk[order], nv[order], nt[order]
+        # last-write-wins: newer entries sorted after older ones (stable sort,
+        # new batch concatenated last), keep the final entry per key
+        keep = np.append(np.diff(nk) != 0, True)
+        nk, nv, nt = nk[keep], nv[keep], nt[keep]
+        cap = self.cap
+        while len(nk) > cap:
+            cap *= 2
+        keys = np.full(cap, np.inf)
+        vals = np.zeros(cap, np.int64)
+        tomb = np.zeros(cap, np.int8)
+        keys[: len(nk)] = nk
+        vals[: len(nk)] = nv
+        tomb[: len(nk)] = nt
+        return TombstoneOverlay(keys, vals, tomb, len(nk), cap)
+
+    def upsert_batch(self, k, v) -> "TombstoneOverlay":
+        k = np.atleast_1d(np.asarray(k, np.float64))
+        v = np.atleast_1d(np.asarray(v, np.int64))
+        return self._apply(k, v, np.zeros(len(k), np.int8))
+
+    def delete_batch(self, k) -> "TombstoneOverlay":
+        k = np.atleast_1d(np.asarray(k, np.float64))
+        return self._apply(k, np.zeros(len(k), np.int64),
+                           np.ones(len(k), np.int8))
+
+    # -- host-side point state ----------------------------------------------
+
+    def get(self, key: float) -> tuple[int, int | None]:
+        """(state, val): state in {LIVE, TOMBSTONE, -1 absent}."""
+        i = int(np.searchsorted(self.keys[: self.count], key))
+        if i < self.count and self.keys[i] == key:
+            if self.tomb[i]:
+                return TOMBSTONE, None
+            return LIVE, int(self.vals[i])
+        return -1, None
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def full_fraction(self) -> float:
+        return self.count / max(self.cap, 1)
+
+    @property
+    def n_tombstones(self) -> int:
+        return int(self.tomb[: self.count].sum())
+
+    @property
+    def n_live(self) -> int:
+        return self.count - self.n_tombstones
+
+    def entries(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(keys, vals, tomb) of the populated prefix, sorted by key."""
+        return (self.keys[: self.count], self.vals[: self.count],
+                self.tomb[: self.count])
+
+
+def fold_overlay(dili, ov: TombstoneOverlay) -> None:
+    """Fold pending writes through the host DILI — the writer-boundary
+    crossing shared by `OnlineIndex.merge` and `sharded_merge`: tombstones
+    via Algorithm 8 (delete), live entries via Algorithm 7 (upsert)."""
+    keys, vals, tomb = ov.entries()
+    for k, v, t in zip(keys, vals, tomb):
+        if t:
+            dili.delete(float(k))
+        else:
+            dili.upsert(float(k), int(v))
+
+
+# ---------------------------------------------------------------------------
+# Device mirror + fused combined lookup
+# ---------------------------------------------------------------------------
+
+
+def overlay_device_arrays(ov: TombstoneOverlay, dtype=jnp.float64) -> dict:
+    """Upload the overlay.  Shapes are the (pow2) capacity, so the fused
+    lookup only re-traces when the overlay doubles."""
+    return dict(keys=jnp.asarray(ov.keys, dtype),
+                vals=jnp.asarray(ov.vals, jnp.int64),
+                tomb=jnp.asarray(ov.tomb, jnp.int8))
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def search_with_updates(idx: dict, ov: dict, queries: jnp.ndarray,
+                        max_depth: int = 24):
+    """One fused pass: snapshot traversal (search_batch) + overlay
+    searchsorted, resolving overlay-hit / overlay-tombstone / snapshot-hit."""
+    v0, f0 = S.search_batch(idx, queries, max_depth)
+    return S.resolve_overlay(ov, queries, v0, f0)

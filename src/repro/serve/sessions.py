@@ -1,56 +1,67 @@
 """Serving-side session table: session-id -> KV-cache slot, through a DILI.
 
-Admission inserts (Algorithm 7), eviction deletes (Algorithm 8) — the
-serving control path exercises the paper's update machinery; the hot lookup
-path is the batched device search on the published snapshot.
+Admission upserts and eviction tombstones go through the online-update
+subsystem (`repro.online`): writes land in the tombstone overlay and the
+merge policy decides when to fold them through the host DILI (Algorithms
+7/8) and publish a fresh snapshot epoch — ONE `flatten()` per merge, never
+per admit/evict.  The hot lookup path is the fused snapshot+overlay device
+search, exact at every point between merges (DESIGN.md section 8).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..core import search as S
-from ..core.dili import bulk_load
-from ..core.flat import flatten
+from ..online import MergePolicy, OnlineIndex
 
 
 class SessionTable:
-    def __init__(self, n_slots: int, warm_ids=None):
+    def __init__(self, n_slots: int, warm_ids=None,
+                 policy: MergePolicy | None = None):
         self.n_slots = n_slots
         self.free = list(range(n_slots))[::-1]
         warm = np.asarray(sorted(warm_ids or [1.0, 2.0]), np.float64)
         slots = np.array([self._take() for _ in warm], np.int64)
-        self.dili = bulk_load(warm, slots)
-        self._publish()
+        # small default buffer: a session table sees bursty admit/evict, so
+        # merge on fill (64 pending) or 256 writes of lag
+        self.index = OnlineIndex(
+            warm, slots, overlay_cap=64,
+            policy=policy or MergePolicy(max_fill=1.0, max_writes=256))
 
     def _take(self) -> int:
         if not self.free:
             raise RuntimeError("no free KV slots")
         return self.free.pop()
 
-    def _publish(self):
-        self.flat = flatten(self.dili)
-        self.idx = S.device_arrays(self.flat)
+    @property
+    def publish_count(self) -> int:
+        """flatten+upload count — one per merge epoch (acceptance metric)."""
+        return self.index.n_flattens
+
+    @property
+    def dili(self):
+        """The host writer (stats/introspection; may lag the overlay)."""
+        return self.index.dili
 
     def admit(self, session_id: float) -> int:
-        slot = self._take()
-        if not self.dili.insert(float(session_id), slot):
-            self.free.append(slot)
+        sid = float(session_id)
+        if self.index.get(sid) is not None:
             raise KeyError(f"session {session_id} already admitted")
-        self._publish()
+        slot = self._take()
+        self.index.upsert(sid, slot)
         return slot
 
     def evict(self, session_id: float) -> None:
-        slot = self.dili.search(float(session_id))
+        sid = float(session_id)
+        slot = self.index.get(sid)
         if slot is None:
             raise KeyError(session_id)
-        self.dili.delete(float(session_id))
+        self.index.delete(sid)
         self.free.append(int(slot))
-        self._publish()
+
+    def flush(self):
+        """Force a merge+publish (e.g. before a latency-critical window)."""
+        return self.index.flush()
 
     def lookup_batch(self, session_ids) -> tuple[np.ndarray, np.ndarray]:
-        import jax.numpy as jnp
-        v, f = S.search_batch(self.idx,
-                              jnp.asarray(session_ids, jnp.float64),
-                              max_depth=self.flat.max_depth + 2)
-        return np.asarray(v), np.asarray(f)
+        return self.index.lookup(np.asarray(session_ids, np.float64))

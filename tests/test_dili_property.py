@@ -1,0 +1,45 @@
+"""Property-based host-DILI tests: random op sequences vs a python dict.
+
+hypothesis is an optional extra (see requirements.txt); the importorskip
+guard keeps `pytest -x -q` collecting when it is absent while keeping the
+property tests runnable wherever it is installed.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.dili import bulk_load  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "search"]),
+              st.integers(0, 400)),
+    min_size=1, max_size=120),
+    st.integers(0, 2**31 - 1))
+def test_random_ops_match_dict(ops, seed):
+    rng = np.random.default_rng(seed)
+    base = np.unique(rng.uniform(0, 1000, 300))
+    d = bulk_load(base)
+    oracle = {float(k): i for i, k in enumerate(base)}
+    universe = np.unique(np.concatenate([base, rng.uniform(0, 1000, 200)]))
+    nxt = len(base)
+    for op, ki in ops:
+        k = float(universe[ki % len(universe)])
+        if op == "insert":
+            r = d.insert(k, nxt)
+            assert r == (k not in oracle)
+            if r:
+                oracle[k] = nxt
+            nxt += 1
+        elif op == "delete":
+            r = d.delete(k)
+            assert r == (k in oracle)
+            oracle.pop(k, None)
+        else:
+            assert d.search(k) == oracle.get(k)
+    # final full validation
+    for k, v in oracle.items():
+        assert d.search(k) == v

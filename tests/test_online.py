@@ -1,0 +1,301 @@
+"""Online-update subsystem (repro.online): tombstone overlay semantics,
+epoch store double-buffering, merge-policy triggers, end-to-end correctness
+between merges, and the one-flatten-per-merge serving contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dili import bulk_load
+from repro.core.flat import flatten
+from repro.online import (LIVE, TOMBSTONE, MergePolicy, OnlineIndex,
+                          SnapshotStore, TombstoneOverlay, adjust_pressure,
+                          overlay_device_arrays, search_with_updates)
+from repro.serve.sessions import SessionTable
+from tests.conftest import make_keys
+
+
+# ---------------------------------------------------------------------------
+# overlay
+# ---------------------------------------------------------------------------
+
+
+def test_overlay_last_write_wins():
+    ov = TombstoneOverlay.empty(16)
+    ov = ov.upsert_batch([5.0], [1])
+    ov = ov.upsert_batch([5.0], [2])          # newer upsert wins
+    assert ov.get(5.0) == (LIVE, 2)
+    ov = ov.delete_batch([5.0])               # delete after upsert -> tomb
+    assert ov.get(5.0) == (TOMBSTONE, None)
+    ov = ov.upsert_batch([5.0], [3])          # upsert after delete -> live
+    assert ov.get(5.0) == (LIVE, 3)
+    assert ov.count == 1                      # one entry per key after dedupe
+    assert ov.get(6.0) == (-1, None)
+    # within one batch the later duplicate wins
+    ov = ov.upsert_batch([7.0, 7.0], [10, 11])
+    assert ov.get(7.0) == (LIVE, 11)
+
+
+def test_overlay_empty_batches_are_noops():
+    ov = TombstoneOverlay.empty(8)
+    assert ov.upsert_batch([], []).count == 0      # empty into empty
+    assert ov.delete_batch([]).count == 0
+    ov = ov.upsert_batch([1.0], [1])
+    ov2 = ov.upsert_batch([], [])                  # empty into non-empty
+    assert ov2.count == 1 and ov2.get(1.0) == (LIVE, 1)
+
+
+def test_empty_flush_keeps_epoch(rng):
+    keys, oi = _fresh(rng, n=500, overlay_cap=32)
+    e0, fl0 = oi.epoch, oi.n_flattens
+    st = oi.flush()                                # nothing pending
+    assert oi.epoch == e0 and oi.n_flattens == fl0
+    assert st.epoch == e0
+
+
+def test_overlay_capacity_doubling():
+    ov = TombstoneOverlay.empty(4)
+    ov = ov.upsert_batch(np.arange(10, dtype=np.float64), np.arange(10))
+    assert ov.count == 10
+    assert ov.cap == 16                       # doubled 4 -> 8 -> 16
+    assert 0 < ov.full_fraction <= 1
+    k, v, t = ov.entries()
+    assert np.array_equal(k, np.arange(10))
+    assert not t.any()
+    ov = ov.delete_batch([3.0, 4.0])
+    assert ov.n_tombstones == 2
+    assert ov.n_live == 8
+
+
+def test_fused_lookup_precedence(rng):
+    keys = make_keys("uniform", 4000, rng)
+    d = bulk_load(keys)
+    store = SnapshotStore()
+    store.publish(flatten(d))
+    ov = TombstoneOverlay.empty(64)
+    ov = ov.upsert_batch([keys[10], keys[0] - 5.0], [777, 888])
+    ov = ov.delete_batch([keys[11]])
+    ova = overlay_device_arrays(ov)
+    q = jnp.asarray([keys[10], keys[0] - 5.0, keys[11], keys[12]])
+    v, f = search_with_updates(store.idx, ova, q,
+                               max_depth=store.max_depth + 2)
+    v, f = np.asarray(v), np.asarray(f)
+    assert f[0] and v[0] == 777        # overlay overrides snapshot value
+    assert f[1] and v[1] == 888        # overlay-only key found
+    assert not f[2]                    # tombstone hides snapshot hit
+    assert f[3] and v[3] == 12         # untouched snapshot key
+
+
+# ---------------------------------------------------------------------------
+# epoch store
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_store_double_buffer(rng):
+    keys = make_keys("uniform", 3000, rng)
+    d = bulk_load(keys)
+    store = SnapshotStore()
+    st1 = store.publish(flatten(d))
+    assert store.epoch == 1 and st1.retraced     # first epoch always traces
+    idx_n = store.idx                            # a reader captures epoch 1
+    for k in keys[:5]:
+        d.delete(float(k))
+    st2 = store.publish(flatten(d), overlay_fill=0.25, merge_lag=5)
+    assert store.epoch == 2
+    assert st2.overlay_fill == 0.25 and st2.merge_lag == 5
+    assert st2.bytes_uploaded > 0 and st2.publish_s >= 0
+    # double buffering: epoch 1's arrays are a different, still-live object
+    assert store.idx is not idx_n
+    from repro.core import search as S
+    v, f = S.search_batch(idx_n, jnp.asarray(keys[:5]),
+                          max_depth=store.max_depth + 2)
+    assert bool(np.asarray(f).all())             # old epoch still consistent
+    v2, f2 = S.search_batch(store.idx, jnp.asarray(keys[:5]),
+                            max_depth=store.max_depth + 2)
+    assert not np.asarray(f2).any()              # new epoch sees the deletes
+
+
+def test_snapshot_store_pow2_padding_stable(rng):
+    """Small mutations must keep padded shapes (no re-trace on republish)."""
+    keys = make_keys("uniform", 3000, rng)
+    d = bulk_load(keys)
+    store = SnapshotStore()
+    store.publish(flatten(d))
+    d.insert(float(keys[0]) + 0.5, 42)
+    st = store.publish(flatten(d))
+    assert not st.retraced
+
+
+# ---------------------------------------------------------------------------
+# merge policy
+# ---------------------------------------------------------------------------
+
+
+def _fresh(rng, n=3000, **kw):
+    keys = make_keys("uniform", n, rng)
+    return keys, OnlineIndex(keys, **kw)
+
+
+def test_merge_trigger_fill(rng):
+    keys, oi = _fresh(rng, overlay_cap=64,
+                      policy=MergePolicy(max_fill=0.5, max_writes=10**9))
+    new = keys[:-1] + np.diff(keys) / 2
+    for j, k in enumerate(new[:31]):
+        oi.upsert(float(k), j)
+    assert oi.n_merges == 0                   # 31/64 < 0.5
+    oi.upsert(float(new[31]), 31)
+    assert oi.n_merges == 1                   # 32/64 hits the fill trigger
+    assert oi.merge_reasons["fill"] == 1
+    assert oi.overlay.count == 0              # overlay reset after merge
+
+
+def test_merge_trigger_lag(rng):
+    keys, oi = _fresh(rng, overlay_cap=4096,
+                      policy=MergePolicy(max_fill=1.1, max_writes=50))
+    new = keys[:-1] + np.diff(keys) / 2
+    for j, k in enumerate(new[:120]):
+        oi.upsert(float(k), j)
+    assert oi.n_merges == 2                   # every 50 writes of lag
+    assert oi.merge_reasons["lag"] == 2
+
+
+def test_merge_trigger_pressure(rng):
+    keys, oi = _fresh(rng, overlay_cap=1 << 16,
+                      policy=MergePolicy(max_fill=1.1, max_writes=10**9,
+                                         pressure_lambda=2.0,
+                                         pressure_check_every=64))
+    # hammer one tiny key interval: all pending writes land in one host leaf
+    lo, hi = float(keys[100]), float(keys[101])
+    hot = np.linspace(lo, hi, 200)[1:-1]
+    for j, k in enumerate(hot):
+        oi.upsert(float(k), j)
+    assert oi.merge_reasons["pressure"] >= 1
+    v, f = oi.lookup(hot)
+    assert f.all()
+    assert np.array_equal(v, np.arange(len(hot)))
+
+
+def test_explicit_flush_and_pressure_metric(rng):
+    keys, oi = _fresh(rng, overlay_cap=1024,
+                      policy=MergePolicy(max_fill=1.1, max_writes=10**9,
+                                         pressure_check_every=10**9))
+    assert adjust_pressure(oi.dili, oi.overlay) == 0.0
+    oi.upsert(float(keys[0]) + 0.25, 1)
+    assert adjust_pressure(oi.dili, oi.overlay) > 0.0
+    e0 = oi.epoch
+    st = oi.flush()
+    assert oi.epoch == e0 + 1 and st.epoch == oi.epoch
+    assert oi.get(float(keys[0]) + 0.25) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: exact at every point between merges
+# ---------------------------------------------------------------------------
+
+
+def test_online_index_matches_oracle_between_merges(rng):
+    keys = make_keys("logn", 4000, rng)
+    oi = OnlineIndex(keys, overlay_cap=128,
+                     policy=MergePolicy(max_fill=0.5, max_writes=300))
+    oracle = {float(k): i for i, k in enumerate(keys)}
+    universe = np.unique(np.concatenate(
+        [keys, rng.uniform(keys[0], keys[-1], 1500)]))
+    ops = rng.integers(0, 3, 900)
+    picks = rng.integers(0, len(universe), 900)
+    nxt = len(keys)
+    for step, (op, pi) in enumerate(zip(ops, picks)):
+        k = float(universe[pi])
+        if op == 0:
+            oi.upsert(k, nxt)
+            oracle[k] = nxt
+            nxt += 1
+        elif op == 1:
+            oi.delete(k)
+            oracle.pop(k, None)
+        if step % 60 == 0:        # exactness probe at arbitrary mid-points
+            qs = universe[rng.integers(0, len(universe), 256)]
+            v, f = oi.lookup(qs)
+            for i, q in enumerate(qs):
+                want = oracle.get(float(q))
+                assert f[i] == (want is not None), (step, q)
+                if want is not None:
+                    assert v[i] == want, (step, q)
+    assert oi.n_merges >= 1       # the workload actually crossed merges
+    qs = np.asarray(list(oracle))
+    v, f = oi.lookup(qs)
+    assert f.all()
+    assert all(v[i] == oracle[float(q)] for i, q in enumerate(qs))
+
+
+def test_merge_upserts_overwrite_in_dense_leaves(rng):
+    """Regression: merging an overlay upsert of an existing key must replace
+    the payload even when that key lives in a dense (DILI-LO) leaf."""
+    keys = np.arange(200, dtype=np.float64)
+    dili = bulk_load(keys, local_optimized=False)
+    oi = OnlineIndex(dili=dili, overlay_cap=64,
+                     policy=MergePolicy(max_fill=1.1, max_writes=10**9))
+    oi.upsert(5.0, 999)
+    oi.flush()
+    v, f = oi.lookup([5.0])
+    assert f[0] and v[0] == 999
+
+
+def test_online_index_int64_payloads(rng):
+    keys, oi = _fresh(rng, n=1000, overlay_cap=64)
+    big = 2**41 + 5
+    oi.upsert(float(keys[0]) + 0.5, big)
+    v, f = oi.lookup([float(keys[0]) + 0.5])
+    assert f[0] and int(v[0]) == big           # via overlay
+    oi.flush()
+    v, f = oi.lookup([float(keys[0]) + 0.5])
+    assert f[0] and int(v[0]) == big           # via merged snapshot
+
+
+# ---------------------------------------------------------------------------
+# serving contract (acceptance): one flatten per merge epoch, not per write
+# ---------------------------------------------------------------------------
+
+
+def test_session_table_one_flatten_per_merge_epoch():
+    t = SessionTable(512, policy=MergePolicy(max_fill=1.1, max_writes=40))
+    live: dict[float, int] = {}
+    n_ops = 0
+    for i in range(160):                       # sustained admit/evict loop
+        sid = 1000.0 + i
+        live[sid] = t.admit(sid)
+        n_ops += 1
+        if i % 3 == 2:                         # evict every third session
+            victim = sorted(live)[0]
+            t.evict(victim)
+            live.pop(victim)
+            n_ops += 1
+        if i % 20 == 0:                        # correct between merges too
+            probe = list(live)[:16]
+            v, f = t.lookup_batch(probe)
+            assert f.all()
+            assert all(v[j] == live[s] for j, s in enumerate(probe))
+            gone = 1000.0 + i + 5000
+            _, f2 = t.lookup_batch([gone])
+            assert not f2[0]
+    # at most one flatten per merge epoch (plus the initial publish) — the
+    # seed behavior was one flatten per admit/evict (n_ops of them)
+    assert t.publish_count == 1 + t.index.n_merges
+    assert t.publish_count <= n_ops // 40 + 2
+    assert n_ops > 4 * t.publish_count
+    # evicted sessions stay invisible after the final state
+    v, f = t.lookup_batch(sorted(live))
+    assert f.all()
+
+
+def test_session_table_admit_evict_semantics_via_overlay():
+    """Duplicate admits / missing evicts must be caught while the state is
+    still overlay-only (before any merge)."""
+    t = SessionTable(16, policy=MergePolicy(max_fill=1.1, max_writes=10**9))
+    s = t.admit(100.5)
+    with pytest.raises(KeyError):
+        t.admit(100.5)                 # live in overlay only
+    t.evict(100.5)
+    with pytest.raises(KeyError):
+        t.evict(100.5)                 # tombstoned in overlay only
+    s2 = t.admit(100.5)                # re-admit after evict
+    assert s2 == s                     # slot recycled
+    assert t.publish_count == 1        # no merge happened at all

@@ -81,6 +81,36 @@ def test_overlay_lookup(snap):
     assert bool(np.asarray(f2).all())
 
 
+def test_overlay_vals_int64_roundtrip(snap):
+    """Overlay payloads above 2^31 must not wrap (overlay_arrays regression)."""
+    keys, d, f, idx = snap
+    big = 2**40 + 123
+    ov = DeltaOverlay.empty(64).insert_batch(
+        np.array([keys[-1] + 9.0]), np.array([big]))
+    ova = S.overlay_arrays(ov)
+    assert ova["vals"].dtype == jnp.int64
+    v, fnd = S.search_with_overlay(idx, ova, jnp.asarray([keys[-1] + 9.0]),
+                                   max_depth=f.max_depth + 2)
+    assert bool(np.asarray(fnd)[0])
+    assert int(np.asarray(v)[0]) == big
+
+
+def test_search_with_overlay_precedence(snap):
+    """Overlay wins over the snapshot; a tombstone hides a snapshot hit."""
+    from repro.online.overlay import TombstoneOverlay, overlay_device_arrays
+    keys, d, f, idx = snap
+    ov = TombstoneOverlay.empty(64)
+    ov = ov.upsert_batch([keys[5]], [999_000])   # overwrite a snapshot key
+    ov = ov.delete_batch([keys[6]])              # tombstone a snapshot key
+    ova = overlay_device_arrays(ov)
+    q = jnp.asarray([keys[5], keys[6], keys[7]])
+    v, fnd = S.search_with_overlay(idx, ova, q, max_depth=f.max_depth + 2)
+    v, fnd = np.asarray(v), np.asarray(fnd)
+    assert fnd[0] and v[0] == 999_000            # overlay beats snapshot val
+    assert not fnd[1]                            # tombstone hides the hit
+    assert fnd[2] and v[2] == 7                  # untouched key unaffected
+
+
 def test_republish_after_updates(snap):
     keys, d, f, idx = snap
     rng = np.random.default_rng(16)
@@ -107,3 +137,46 @@ def test_range_query_batch(snap):
     assert counts[0] == 30 and counts[1] == 20
     got = np.asarray(ks[0])[:30]
     assert np.array_equal(got, keys[50:80])
+
+
+def test_range_query_batch_matches_host(snap):
+    """Exact agreement with host DILI.range_query on random windows.
+
+    Re-flattens at test time: the module-scoped host `d` may have absorbed
+    updates from earlier tests, which also exercises ranges post-update."""
+    keys, d, _, _ = snap
+    f = flatten(d)
+    idx = S.device_arrays(f)
+    rng = np.random.default_rng(21)
+    starts = rng.integers(0, len(keys) - 120, 16)
+    widths = rng.integers(1, 100, 16)
+    lo = keys[starts]
+    hi = keys[np.minimum(starts + widths, len(keys) - 1)]
+    ks, vs, counts = S.range_query_batch(idx, jnp.asarray(lo),
+                                         jnp.asarray(hi), max_hits=256)
+    ks, vs, counts = np.asarray(ks), np.asarray(vs), np.asarray(counts)
+    for i in range(len(lo)):
+        expect = d.range_query(float(lo[i]), float(hi[i]))
+        assert counts[i] == len(expect)
+        got_k = ks[i][: counts[i]]
+        got_v = vs[i][: counts[i]]
+        assert np.array_equal(got_k, [p[0] for p in expect])
+        assert np.array_equal(got_v, [p[1] for p in expect])
+
+
+def test_range_query_batch_max_hits_truncation(snap):
+    """Overflowing windows truncate: count saturates at max_hits and every
+    returned (key, val) is a true member of the host result."""
+    keys, d, _, _ = snap
+    idx = S.device_arrays(flatten(d))
+    lo, hi = float(keys[200]), float(keys[500])     # ~300 pairs > max_hits=32
+    ks, vs, counts = S.range_query_batch(idx, jnp.asarray([lo]),
+                                         jnp.asarray([hi]), max_hits=32)
+    counts = np.asarray(counts)
+    assert counts[0] == 32
+    expect = dict(d.range_query(lo, hi))
+    got_k = np.asarray(ks[0])
+    got_v = np.asarray(vs[0])
+    assert np.all(np.diff(got_k) >= 0)              # sorted ascending
+    for k, v in zip(got_k, got_v):
+        assert k in expect and expect[k] == v
