@@ -72,5 +72,9 @@ def queries_for(name: str, n: int = None, seed: int = 7) -> np.ndarray:
     return keys[rng.integers(0, len(keys), n or N_QUERIES)]
 
 
+ROWS: list[dict] = []       # every csv_row, for machine-readable emission
+
+
 def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append(dict(name=name, value=float(us_per_call), derived=derived))
     print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,55 @@
+"""One-shot capture of the PRE-PR2 hot-path numbers (point lookup + fig6b
+range query) at the acceptance scale.  Run from the pre-PR2 tree; writes
+benchmarks/baseline_pre_pr2.json which `run.py --json` compares against.
+
+    BENCH_N_KEYS=300000 PYTHONPATH=src python benchmarks/pre_pr2_capture.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from common import DATASETS, N_KEYS, N_QUERIES, dili_for, queries_for, time_fn
+from repro.core import search as S
+
+
+def capture(path: str) -> dict:
+    out: dict = dict(n_keys=N_KEYS, n_queries=N_QUERIES, sections={})
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        q = jnp.asarray(queries_for(name))
+        md = f.max_depth + 2
+        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        out["sections"][f"point_lookup,{name}"] = dict(
+            ns_per_query=t / N_QUERIES * 1e9, max_depth=f.max_depth)
+        print(name, "point", t / N_QUERIES * 1e9, flush=True)
+        rng = np.random.default_rng(3)
+        starts = rng.integers(0, len(keys) - 101, 512)
+        lo = jnp.asarray(keys[starts])
+        hi = jnp.asarray(keys[starts + 100])
+        tr = time_fn(lambda lo, hi: S.range_query_batch(idx, lo, hi,
+                                                        max_hits=128), lo, hi)
+        out["sections"][f"range_query,{name}"] = dict(
+            us_per_query=tr / 512 * 1e6, n_slots=f.n_slots)
+        print(name, "range", tr / 512 * 1e6, flush=True)
+        with open(path, "w") as fh:     # incremental: partial runs count
+            json.dump(out, fh, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    path = (sys.argv[1] if len(sys.argv) > 1 else
+            os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "baseline_pre_pr2.json"))
+    rows = capture(path)
+    print(json.dumps(rows, indent=1))

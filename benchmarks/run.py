@@ -5,6 +5,18 @@ Scaled to BENCH_N_KEYS (default 300k; the paper's 200M is one env var away).
 Lookup wall-times are CPU-JAX batched timings — the relative ordering is the
 claim under test; the TPU roofline story lives in benchmarks/roofline.py +
 EXPERIMENTS.md.
+
+Cost model (since PR 2, DESIGN.md section 9): point lookups are depth-exact —
+the traversal trip count is the snapshot's true `max_depth` with batch-
+convergence early exit, never a fixed worst-case scan — and range queries
+bisect the flatten()-time key-sorted pair table, O(log n + max_hits) per
+query instead of the old O(n_slots) global slot-table mask-scan.  So lookup
+cost scales with tree height and range cost with hits, not with table size.
+
+``--json PATH`` additionally writes every row machine-readably;
+``--pr2-json`` emits BENCH_PR2.json — the PR-2 acceptance artifact comparing
+the hot paths against benchmarks/baseline_pre_pr2.json (captured on the
+pre-PR tree with the same datasets/scales).
 """
 
 from __future__ import annotations
@@ -34,10 +46,9 @@ from repro.core.flat import flatten                     # noqa: E402
 def _dili_lookup_time(name: str, **kw) -> tuple[float, dict]:
     keys, d, f, idx = dili_for(name, **kw)
     q = jnp.asarray(queries_for(name))
-    md = f.max_depth + 2
-    t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
-    v, fnd, nodes, probes = S.search_batch(idx, q, max_depth=md,
-                                           with_stats=True)
+    # serving configuration: depth-exact from the snapshot + early exit
+    t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
+    v, fnd, nodes, probes = S.search_batch(idx, q, with_stats=True)
     assert bool(np.asarray(fnd).all())
     return t, dict(nodes=float(np.asarray(nodes).mean()),
                    probes=float(np.asarray(probes).mean()),
@@ -182,8 +193,7 @@ def table78_hyperparams():
         d = bulk_load(keys, cm=CostModel(rho=rho), sample_stride=4)
         f = flatten(d)
         idx = S.device_arrays(f)
-        md = f.max_depth + 2
-        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         s = d.stats()
         csv_row(f"table7,rho={rho}", t / N_QUERIES * 1e9,
                 f"avg_h={s['avg_height']:.2f};bytes/key="
@@ -200,8 +210,7 @@ def table78_hyperparams():
         t_ins = (_t.perf_counter() - t0) / len(other)
         f = flatten(d)
         idx = S.device_arrays(f)
-        md = f.max_depth + 2
-        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         s = d.stats()
         csv_row(f"table8,lambda={lam}", t / N_QUERIES * 1e9,
                 f"ins_us={t_ins * 1e6:.1f};avg_h={s['avg_height']:.2f};"
@@ -286,8 +295,7 @@ def fig9_scale():
         f = flatten(d)
         idx = S.device_arrays(f)
         q = jnp.asarray(keys[rng.integers(0, n, N_QUERIES)])
-        md = f.max_depth + 2
-        t = time_fn(lambda q: S.search_batch(idx, q, max_depth=md), q)
+        t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         csv_row(f"fig9a,n={n}", t / N_QUERIES * 1e9)
 
 
@@ -379,12 +387,11 @@ def kernel_bench():
     csv_row("kernel,pallas_interpret", t / 16384 * 1e9,
             f"table_bytes={K.table_bytes(arrs)}")
     idx = K._as_search_idx(arrs)
-    t2 = time_fn(lambda q: S2.search_batch(idx, q, max_depth=f.max_depth + 2),
-                 q)
+    t2 = time_fn(lambda q: S2.search_batch(idx, q, max_depth=f.max_depth,
+                                           early_exit=True), q)
     csv_row("kernel,xla_f32", t2 / 16384 * 1e9)
     # roofline: bytes/query on the device path (node+slot rows touched)
-    v, fnd, nodes, probes = S2.search_batch(idx, q,
-                                            max_depth=f.max_depth + 2,
+    v, fnd, nodes, probes = S2.search_batch(idx, q, max_depth=f.max_depth,
                                             with_stats=True)
     node_row, slot_row = 17, 9      # f32 snapshot row sizes
     bpq = float(np.asarray(nodes).mean()) * node_row \
@@ -399,15 +406,88 @@ ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        kernel_bench]
 
 
+def bench_pr2(out_path: str) -> dict:
+    """PR-2 acceptance artifact: re-measure the two overhauled hot paths and
+    record them ALONGSIDE the pre-PR numbers (benchmarks/baseline_pre_pr2.json,
+    captured on the pre-PR tree at the same scales) with derived speedups."""
+    import json
+    from common import N_KEYS
+    base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline_pre_pr2.json")
+    baseline = {}
+    if os.path.exists(base_path):
+        baseline = json.load(open(base_path))
+    if baseline and baseline.get("n_keys") != N_KEYS:
+        # speedups are only meaningful at the baseline's scale
+        print(f"# WARNING: baseline captured at n_keys={baseline.get('n_keys')}"
+              f" but this run uses {N_KEYS}; skipping speedup comparison")
+        baseline = {}
+    base_sec = baseline.get("sections", {})
+    print("# PR2: hot-path trajectory vs pre-PR baseline")
+    out: dict = dict(n_keys=N_KEYS, n_queries=N_QUERIES,
+                     baseline_n_keys=baseline.get("n_keys"),
+                     cost_model="depth-exact traversal + early exit; "
+                                "O(log n + max_hits) sorted-pair ranges",
+                     sections={})
+    for name in DATASETS:
+        keys, d, f, idx = dili_for(name)
+        q = jnp.asarray(queries_for(name))
+        t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
+        new_ns = t / N_QUERIES * 1e9
+        old = base_sec.get(f"point_lookup,{name}", {})
+        old_ns = old.get("ns_per_query")
+        out["sections"][f"point_lookup,{name}"] = dict(
+            ns_per_query=new_ns, pre_pr_ns_per_query=old_ns,
+            speedup=(old_ns / new_ns) if old_ns else None,
+            max_depth=f.max_depth)
+        csv_row(f"pr2,point_lookup,{name}", new_ns,
+                f"pre_pr={old_ns};speedup="
+                f"{(old_ns / new_ns) if old_ns else float('nan'):.2f}x")
+        rng = np.random.default_rng(3)
+        starts = rng.integers(0, len(keys) - 101, 512)
+        lo = jnp.asarray(keys[starts])
+        hi = jnp.asarray(keys[starts + 100])
+        tr = time_fn(lambda lo, hi: S.range_query_batch(idx, lo, hi,
+                                                        max_hits=128), lo, hi)
+        new_us = tr / 512 * 1e6
+        oldr = base_sec.get(f"range_query,{name}", {})
+        old_us = oldr.get("us_per_query")
+        out["sections"][f"range_query,{name}"] = dict(
+            us_per_query=new_us, pre_pr_us_per_query=old_us,
+            speedup=(old_us / new_us) if old_us else None,
+            n_pairs=f.n_pairs)
+        csv_row(f"pr2,range_query,{name}", new_us,
+                f"pre_pr={old_us};speedup="
+                f"{(old_us / new_us) if old_us else float('nan'):.2f}x")
+    with open(out_path, "w") as fh:
+        json.dump(out, fh, indent=1)
+    print(f"# wrote {out_path}")
+    return out
+
+
 def main() -> None:
     import argparse
+    import json
+    from common import ROWS
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="write every CSV row (name/value/derived) here")
+    ap.add_argument("--pr2-json", default="",
+                    help="write the BENCH_PR2.json hot-path trajectory here "
+                         "(skips the per-table sections unless --only set)")
     args = ap.parse_args()
-    for fn in ALL:
-        if args.only and args.only not in fn.__name__:
-            continue
-        fn()
+    if not args.pr2_json or args.only:
+        for fn in ALL:
+            if args.only and args.only not in fn.__name__:
+                continue
+            fn()
+    if args.pr2_json:
+        bench_pr2(args.pr2_json)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(dict(n_queries=N_QUERIES, rows=ROWS), fh, indent=1)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

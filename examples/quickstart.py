@@ -33,7 +33,7 @@ def main():
     rng = np.random.default_rng(0)
     q = jnp.asarray(keys[rng.integers(0, len(keys), 8192)])
 
-    v, found = S.search_batch(idx, q, max_depth=flat.max_depth + 2)
+    v, found = S.search_batch(idx, q)   # trip count from the snapshot
     assert bool(found.all())
     print(f"batched lookup: 8192/8192 found; index {flat.nbytes()/1e6:.1f} MB")
 
@@ -44,7 +44,7 @@ def main():
     dili.delete(float(keys[5]))
     flat2 = flatten(dili)
     idx2 = S.device_arrays(flat2)
-    v2, f2 = S.search_batch(idx2, jnp.asarray(new), max_depth=flat2.max_depth + 2)
+    v2, f2 = S.search_batch(idx2, jnp.asarray(new), early_exit=True)
     print(f"after {len(new)} inserts + 1 delete: all new keys found = "
           f"{bool(f2.all())}; adjustments={dili.n_adjustments}")
 
@@ -54,8 +54,7 @@ def main():
         _, fb, pr = B.lookup(B.device(st), q)
         print(f"{B.name}: found={bool(np.asarray(fb).all())}, "
               f"avg probes={float(np.asarray(pr).mean()):.1f}")
-    _, _, nodes, probes = S.search_batch(idx, q, max_depth=flat.max_depth + 2,
-                                         with_stats=True)
+    _, _, nodes, probes = S.search_batch(idx, q, with_stats=True)
     print(f"DILI: avg nodes={float(np.asarray(nodes).mean()):.2f}, "
           f"avg probes={float(np.asarray(probes).mean()):.2f}  "
           f"(the paper's cache-miss economy)")

@@ -440,8 +440,9 @@ class LIPP:
     @staticmethod
     def lookup(st, q):
         from . import search as S
-        v, f, nodes, probes = S.search_batch(st, q, max_depth=24,
-                                             with_stats=True)
+        # depth derives from the snapshot (resolve_max_depth), never a
+        # hard-coded trip count
+        v, f, nodes, probes = S.search_batch(st, q, with_stats=True)
         return v, f, nodes + probes
 
 

@@ -50,6 +50,7 @@ class ShardedDILI:
     boundaries: np.ndarray  # [R+1] range boundaries (replicated)
     n_shards: int
     max_depth: int
+    has_dense: bool = True  # any shard has dense (DILI-LO) leaves
     # online-update state (None when built with keep_host=False)
     flats: list | None = None      # per-shard FlatDILI (current epoch)
     dilis: list | None = None      # per-shard host DILI writers
@@ -69,6 +70,8 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
 def _stack_flats(flats: list[FlatDILI]) -> dict:
     n_nodes = 1 << max(1, math.ceil(math.log2(max(f.n_nodes for f in flats))))
     n_slots = 1 << max(1, math.ceil(math.log2(max(f.n_slots for f in flats))))
+    n_pairs = 1 << max(1, math.ceil(math.log2(max(max(f.n_pairs, 1)
+                                                  for f in flats))))
     return dict(
         a=np.stack([_pad_to(f.a, n_nodes, 0.0) for f in flats]),
         b=np.stack([_pad_to(f.b, n_nodes, 0.0) for f in flats]),
@@ -79,6 +82,11 @@ def _stack_flats(flats: list[FlatDILI]) -> dict:
         key=np.stack([_pad_to(f.key, n_slots, 0.0) for f in flats]),
         # int64 payloads end-to-end (int32 wrapped payloads above 2^31)
         val=np.stack([_pad_to(f.val, n_slots, -1) for f in flats]),
+        # key-sorted pair table per shard (range queries); +inf pads keep the
+        # searchsorted window inside the populated prefix
+        pair_key=np.stack([_pad_to(f.pair_key, n_pairs, np.inf)
+                           for f in flats]),
+        pair_val=np.stack([_pad_to(f.pair_val, n_pairs, -1) for f in flats]),
         root=np.array([f.root for f in flats], np.int32),
     )
 
@@ -106,9 +114,12 @@ def build_sharded(keys: np.ndarray, vals: np.ndarray | None, n_shards: int,
                                  [keys[cuts[r]] for r in range(1, n_shards)],
                                  [np.inf]])
     stack = _stack_flats(flats)
-    max_depth = max(f.max_depth for f in flats) + 2
+    # depth-exact: the deepest shard's true height IS the trip count (padding
+    # never deepens a tree, and off-range queries miss before going deeper)
+    max_depth = max(f.max_depth for f in flats)
     sd = ShardedDILI(idx=stack, boundaries=boundaries, n_shards=n_shards,
-                     max_depth=max_depth)
+                     max_depth=max_depth,
+                     has_dense=any(bool(f.dense.any()) for f in flats))
     if keep_host:
         sd.flats = flats
         sd.dilis = dilis
@@ -134,30 +145,51 @@ def to_mesh(sd: ShardedDILI, mesh: Mesh, axis: str = "data",
     return out
 
 
-def _local_search(local_idx: dict, q: jnp.ndarray, max_depth: int):
+def _local_search(local_idx: dict, q: jnp.ndarray, max_depth: int,
+                  has_dense: bool = True):
     idx = {k: v[0] for k, v in local_idx.items() if k != "boundaries"}
     idx["root"] = local_idx["root"][0]
     idx["max_depth"] = max_depth
+    idx["has_dense"] = has_dense       # static: skips the dense probe phases
+    # depth-exact fixed-trip scan: shard_map has no replication rule for
+    # while_loop (jax 0.4.x), so the early-exit variant stays host-side
     return S.search_batch(idx, q, max_depth=max_depth)
+
+
+def _empty_overlay(dtype) -> dict:
+    """Replicated no-op overlay: lets one shard_map trace serve both the
+    plain and the overlay read path."""
+    return dict(keys=jnp.full(1, np.inf, dtype),
+                vals=jnp.zeros(1, jnp.int64),
+                tomb=jnp.zeros(1, jnp.int8))
 
 
 def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
                    max_depth: int, axis: str = "data",
-                   strategy: str = "gather"):
-    """Batched lookup across the mesh.  `queries` sharded over `axis`."""
+                   strategy: str = "gather", overlay: dict | None = None,
+                   has_dense: bool = True):
+    """Batched lookup across the mesh.  `queries` sharded over `axis`.
+
+    `overlay` (a replicated combined-overlay dict) is resolved INSIDE the
+    shard_map body — snapshot traversal + overlay searchsorted are one fused
+    device dispatch, with no host round-trip between them.  Each query's
+    overlay state is applied by the one shard that owns its key range."""
     from jax.experimental.shard_map import shard_map
 
     n_shards = mesh.shape[axis]
     bounds = sd_arrays["boundaries"]
+    ov = overlay if overlay is not None else _empty_overlay(bounds.dtype)
 
     in_specs = ({k: P(axis) for k in sd_arrays if k != "boundaries"}
                 | {"boundaries": P()})
+    ov_specs = {k: P() for k in ov}
 
     if strategy == "gather":
-        def body(local, bnd, q):
+        def body(local, bnd, ovr, q):
             r = jax.lax.axis_index(axis)
             q_all = jax.lax.all_gather(q, axis, tiled=True)       # [Q_total]
-            v, f = _local_search(local, q_all, max_depth)
+            v, f = _local_search(local, q_all, max_depth, has_dense)
+            v, f = S.resolve_overlay(ovr, q_all, v, f)
             # mask to own range: boundaries[r] <= q < boundaries[r+1]
             own = (q_all >= bnd[r]) & (q_all < bnd[r + 1])
             v = jnp.where(own & f, v, 0)
@@ -169,15 +201,15 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
             return v, f > 0
 
         fn = shard_map(body, mesh=mesh,
-                       in_specs=(in_specs, P(), P(axis)),
+                       in_specs=(in_specs, P(), ov_specs, P(axis)),
                        out_specs=(P(axis), P(axis)))
-        return fn(sd_arrays, bounds, queries)
+        return fn(sd_arrays, bounds, ov, queries)
 
     elif strategy == "a2a":
         qn = queries.shape[0] // n_shards          # per-device query count
         cap = int(2 * math.ceil(qn / n_shards))    # capacity slack 2x
 
-        def body(local, bnd, q):
+        def body(local, bnd, ovr, q):
             r = jax.lax.axis_index(axis)
             dest = jnp.clip(jnp.searchsorted(bnd, q, side="right") - 1,
                             0, n_shards - 1)                     # [qn]
@@ -193,7 +225,9 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
                 jnp.where(ok, q_sorted, jnp.inf))
             recv = jax.lax.all_to_all(buckets, axis, split_axis=0,
                                       concat_axis=0, tiled=True)  # [R*cap]
-            v, f = _local_search(local, recv.reshape(-1), max_depth)
+            v, f = _local_search(local, recv.reshape(-1), max_depth,
+                                 has_dense)
+            v, f = S.resolve_overlay(ovr, recv.reshape(-1), v, f)
             v = v.reshape(n_shards, cap)
             f = f.reshape(n_shards, cap)
             vb = jax.lax.all_to_all(v, axis, split_axis=0, concat_axis=0,
@@ -207,10 +241,67 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
             return vs[inv], fs[inv], jnp.sum(~ok).astype(jnp.int32)[None]
 
         fn = shard_map(body, mesh=mesh,
-                       in_specs=(in_specs, P(), P(axis)),
+                       in_specs=(in_specs, P(), ov_specs, P(axis)),
                        out_specs=(P(axis), P(axis), P(axis)))
-        return fn(sd_arrays, bounds, queries)
+        return fn(sd_arrays, bounds, ov, queries)
     raise ValueError(strategy)
+
+
+def sharded_range_query(mesh: Mesh, sd_arrays: dict, lo: jnp.ndarray,
+                        hi: jnp.ndarray, max_hits: int = 128,
+                        axis: str = "data"):
+    """Range queries across the mesh: for each (lo, hi) return the first
+    `max_hits` pairs in [lo, hi) ascending plus the count (saturating).
+
+    Each shard bisects ITS key-sorted pair table over the window clipped to
+    its own key range — O(log n_shard + max_hits) per query per shard — then
+    writes its run into the global answer at the offset given by the
+    exclusive prefix of per-shard counts (shard ranges are disjoint and
+    ordered, so shard-order concatenation IS key order).  One psum_scatter
+    assembles and returns each device's query slice.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_shards = mesh.shape[axis]
+    bounds = sd_arrays["boundaries"]
+    in_specs = ({k: P(axis) for k in sd_arrays if k != "boundaries"}
+                | {"boundaries": P()})
+
+    def body(local, bnd, lo, hi):
+        r = jax.lax.axis_index(axis)
+        lo_all = jax.lax.all_gather(lo, axis, tiled=True)        # [Q]
+        hi_all = jax.lax.all_gather(hi, axis, tiled=True)
+        pk = local["pair_key"][0]
+        pv = local["pair_val"][0]
+        # clip the window to this shard's key range
+        slo = jnp.maximum(lo_all, bnd[r])
+        shi = jnp.maximum(jnp.minimum(hi_all, bnd[r + 1]), slo)
+        start = jnp.searchsorted(pk, slo, side="left")
+        cnt = jnp.searchsorted(pk, shi, side="left") - start     # [Q]
+        # exclusive prefix of counts over earlier shards = this run's offset
+        cnt_all = jax.lax.all_gather(cnt, axis)                  # [R, Q]
+        before = jnp.sum(
+            jnp.where(jnp.arange(n_shards)[:, None] < r, cnt_all, 0), axis=0)
+        posn = jnp.arange(max_hits)[None, :]                     # [1, H]
+        rel = posn - before[:, None]                             # [Q, H]
+        mine = (rel >= 0) & (rel < cnt[:, None])
+        g = jnp.clip(start[:, None] + rel, 0, pk.shape[0] - 1)
+        # additive assembly: exactly one shard owns each (query, position)
+        ks = jnp.where(mine, pk[g], 0.0)
+        vs = jnp.where(mine, pv[g], 0)
+        ks = jax.lax.psum_scatter(ks, axis, scatter_dimension=0, tiled=True)
+        vs = jax.lax.psum_scatter(vs, axis, scatter_dimension=0, tiled=True)
+        total = jax.lax.psum_scatter(cnt, axis, scatter_dimension=0,
+                                     tiled=True)                 # [Q/R]
+        filled = posn < jnp.minimum(total, max_hits)[:, None]
+        ks = jnp.where(filled, ks, jnp.inf)
+        vs = jnp.where(filled, vs, -1)
+        return ks, vs, jnp.minimum(total, max_hits).astype(jnp.int32)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(in_specs, P(), P(axis), P(axis)),
+                   out_specs=(P(axis, None), P(axis, None), P(axis)))
+    return fn(sd_arrays, bounds, lo, hi)
 
 
 # ---------------------------------------------------------------------------
@@ -277,8 +368,9 @@ def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0) -> list[int]:
     sd._ov_cache.clear()
     n_nodes = sd.idx["a"].shape[1]
     n_slots = sd.idx["tag"].shape[1]
+    n_pairs = sd.idx["pair_key"].shape[1]
     if any(sd.flats[r].n_nodes > n_nodes or sd.flats[r].n_slots > n_slots
-           for r in merged):
+           or sd.flats[r].n_pairs > n_pairs for r in merged):
         sd.idx = _stack_flats(sd.flats)      # grow: re-pad every shard
     else:
         for r in merged:                     # steady state: row rewrite only
@@ -291,8 +383,11 @@ def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0) -> list[int]:
             sd.idx["tag"][r] = _pad_to(f.tag, n_slots, 0)
             sd.idx["key"][r] = _pad_to(f.key, n_slots, 0.0)
             sd.idx["val"][r] = _pad_to(f.val, n_slots, -1)
+            sd.idx["pair_key"][r] = _pad_to(f.pair_key, n_pairs, np.inf)
+            sd.idx["pair_val"][r] = _pad_to(f.pair_val, n_pairs, -1)
             sd.idx["root"][r] = f.root
-    sd.max_depth = max(f.max_depth for f in sd.flats) + 2
+    sd.max_depth = max(f.max_depth for f in sd.flats)
+    sd.has_dense = any(bool(f.dense.any()) for f in sd.flats)
     sd.epoch += 1
     return merged
 
@@ -322,11 +417,10 @@ def sharded_lookup_with_overlay(mesh: Mesh, sd_arrays: dict,
                                 sd: ShardedDILI, queries: jnp.ndarray,
                                 max_depth: int, axis: str = "data",
                                 strategy: str = "gather"):
-    """Sharded snapshot lookup + fused overlay resolution (replicated
-    combined overlay over the sharded results)."""
-    out = sharded_lookup(mesh, sd_arrays, queries, max_depth, axis=axis,
-                         strategy=strategy)
-    v, f = out[0], out[1]
+    """Sharded snapshot lookup with the (replicated) combined overlay
+    resolved inside the shard_map body — ONE fused device dispatch per query
+    batch, no extra host round-trip for the overlay pass."""
     ova = combined_overlay_arrays(sd, sd_arrays["boundaries"].dtype)
-    v, f = S.resolve_overlay(ova, queries, v, f)
-    return (v, f) + tuple(out[2:])
+    return sharded_lookup(mesh, sd_arrays, queries, max_depth, axis=axis,
+                          strategy=strategy, overlay=ova,
+                          has_dense=sd.has_dense)

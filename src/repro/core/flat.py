@@ -17,10 +17,19 @@ Slot table (one row per slot of every node, concatenated):
 Internal nodes are just nodes whose slots are all CHILD — search over the
 whole tree (Alg. 6) collapses into ONE loop (search.py).
 
-A sorted *delta overlay* (LSM-style) absorbs freshly inserted keys between
-snapshot publishes.  `DeltaOverlay` below is the insert-only sketch; the full
-tombstone-capable overlay + epoch/merge lifecycle lives in `repro.online`
-(DESIGN.md section 8).
+Pair table (key-sorted auxiliary view of every PAIR slot, built once per
+flatten; DESIGN.md section 9):
+    pair_key  : sorted pair keys
+    pair_val  : payloads, aligned with pair_key
+    pair_slot : slot-table rank of each pair (its row in the slot table)
+
+Range queries bisect the pair table (two searchsorted) and gather one bounded
+window — O(log n + max_hits) per query — instead of scanning the slot table.
+
+The live write path is `repro.online`'s tombstone-capable overlay +
+epoch/merge lifecycle (DESIGN.md section 8).  `DeltaOverlay` below is the
+legacy insert-only buffer, kept for the single-process convenience path and
+its tests; it is NOT what serving uses.
 """
 
 from __future__ import annotations
@@ -46,6 +55,10 @@ class FlatDILI:
     tag: np.ndarray      # i8  [n_slots]
     key: np.ndarray      # f64 [n_slots]
     val: np.ndarray      # i64 [n_slots]
+    # pair table (key-sorted auxiliary view of the PAIR slots)
+    pair_key: np.ndarray   # f64 [n_pairs], sorted ascending
+    pair_val: np.ndarray   # i64 [n_pairs]
+    pair_slot: np.ndarray  # i32 [n_pairs], slot-table rank of each pair
     root: int
     max_depth: int
     key_lo: float
@@ -59,23 +72,29 @@ class FlatDILI:
     def n_slots(self) -> int:
         return len(self.tag)
 
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pair_key)
+
     def nbytes(self) -> int:
         return sum(x.nbytes for x in
                    (self.a, self.b, self.base, self.fo, self.dense,
-                    self.tag, self.key, self.val))
+                    self.tag, self.key, self.val,
+                    self.pair_key, self.pair_val, self.pair_slot))
 
     def astype(self, dtype) -> "FlatDILI":
         """Cast key/model dtype (f32 for the Pallas TPU kernel path)."""
         return FlatDILI(self.a.astype(dtype), self.b.astype(dtype),
                         self.base, self.fo, self.dense, self.tag,
-                        self.key.astype(dtype), self.val, self.root,
+                        self.key.astype(dtype), self.val,
+                        self.pair_key.astype(dtype), self.pair_val,
+                        self.pair_slot, self.root,
                         self.max_depth, self.key_lo, self.key_hi)
 
 
 def flatten(dili: DILI) -> FlatDILI:
     """BFS over the host tree, assigning node ids and slot ranges."""
     nodes: list = []
-    stack = [dili.root]
     ids: dict[int, int] = {}
     # BFS so parents get smaller ids than children (nice for cache locality of
     # the hot top levels when the table is VMEM-tiled).
@@ -134,15 +153,24 @@ def flatten(dili: DILI) -> FlatDILI:
             vals.append(v)
             cursor += m
 
-    depth = _max_depth(dili.root)
-    st = dili.root
+    tag_all = np.concatenate(tags) if tags else np.zeros(0, np.int8)
+    key_all = np.concatenate(keys) if keys else np.zeros(0)
+    val_all = np.concatenate(vals) if vals else np.zeros(0, np.int64)
+
+    # pair table: key-sorted view of the PAIR slots.  Slots are BFS-ordered,
+    # not key-ordered, so one argsort here buys O(log n + k) range queries
+    # (two searchsorted + a bounded window gather) on the device.
+    slots = np.nonzero(tag_all == TAG_PAIR)[0].astype(np.int32)
+    order = np.argsort(key_all[slots], kind="stable")
+    pair_slot = slots[order]
+
     return FlatDILI(
         a=a, b=b, base=base, fo=fo, dense=dense,
-        tag=np.concatenate(tags) if tags else np.zeros(0, np.int8),
-        key=np.concatenate(keys) if keys else np.zeros(0),
-        val=np.concatenate(vals) if vals else np.zeros(0, np.int64),
-        root=ids[id(dili.root)], max_depth=depth,
-        key_lo=float(st.lb), key_hi=float(st.ub),
+        tag=tag_all, key=key_all, val=val_all,
+        pair_key=key_all[pair_slot], pair_val=val_all[pair_slot],
+        pair_slot=pair_slot,
+        root=ids[id(dili.root)], max_depth=_max_depth(dili.root),
+        key_lo=float(dili.root.lb), key_hi=float(dili.root.ub),
     )
 
 
@@ -167,6 +195,48 @@ def _max_depth(root) -> int:
 # ---------------------------------------------------------------------------
 
 
+def merge_sorted_runs(old_k: np.ndarray, old_cols: tuple,
+                      new_k: np.ndarray, new_cols: tuple):
+    """Merge an already-sorted run with an (unsorted) write batch.
+
+    Last-write-wins: a new key displaces an old entry with the same key, and
+    within the batch the later duplicate wins.  Cost is O(n + k log n): the
+    batch is sorted (k log k), binary-searched against the old run, and both
+    runs are scattered straight into their merged positions — the old run is
+    never re-sorted.  Returns (keys, cols) with cols aligned to keys.
+    """
+    new_k = np.asarray(new_k, old_k.dtype)
+    order = np.argsort(new_k, kind="stable")
+    new_k = new_k[order]
+    new_cols = tuple(np.asarray(c)[order] for c in new_cols)
+    keep = np.ones(len(new_k), bool)                 # in-batch dedupe (last)
+    keep[:-1] = np.diff(new_k) != 0
+    new_k = new_k[keep]
+    new_cols = tuple(c[keep] for c in new_cols)
+
+    if len(new_k):
+        # drop old entries shadowed by the batch
+        pos = np.minimum(np.searchsorted(new_k, old_k), len(new_k) - 1)
+        live = new_k[pos] != old_k
+        old_k = old_k[live]
+        old_cols = tuple(c[live] for c in old_cols)
+
+    # interleave: each run's rank among the other gives its merged position
+    n = len(old_k) + len(new_k)
+    at_old = np.searchsorted(new_k, old_k) + np.arange(len(old_k))
+    at_new = np.searchsorted(old_k, new_k) + np.arange(len(new_k))
+    mk = np.empty(n, old_k.dtype)
+    mk[at_old] = old_k
+    mk[at_new] = new_k
+    cols = []
+    for oc, nc in zip(old_cols, new_cols):
+        mc = np.empty(n, oc.dtype)
+        mc[at_old] = oc
+        mc[at_new] = nc
+        cols.append(mc)
+    return mk, tuple(cols)
+
+
 @dataclass
 class DeltaOverlay:
     keys: np.ndarray     # f64 [cap], padded with +inf
@@ -179,13 +249,11 @@ class DeltaOverlay:
         return DeltaOverlay(np.full(cap, np.inf), np.zeros(cap, np.int64), 0, cap)
 
     def insert_batch(self, k: np.ndarray, v: np.ndarray) -> "DeltaOverlay":
-        nk = np.concatenate([self.keys[: self.count], np.asarray(k, np.float64)])
-        nv = np.concatenate([self.vals[: self.count], np.asarray(v, np.int64)])
-        order = np.argsort(nk, kind="stable")
-        nk, nv = nk[order], nv[order]
-        # dedupe, keep last write
-        keep = np.append(np.diff(nk) != 0, True)
-        nk, nv = nk[keep], nv[keep]
+        # the buffer is already sorted: merge two runs instead of re-sorting
+        # the whole thing — absorption is O(n + k log n), not O((n+k) log(n+k))
+        nk, (nv,) = merge_sorted_runs(
+            self.keys[: self.count], (self.vals[: self.count],),
+            np.asarray(k, np.float64), (np.asarray(v, np.int64),))
         cap = self.cap
         while len(nk) > cap:
             cap *= 2

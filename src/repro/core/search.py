@@ -6,6 +6,14 @@ clamp + two gathers per query — the TPU adaptation of Algorithm 6's pointer
 chase.  Dense (DILI-LO) leaves exit the loop and run the paper's exponential
 search (Algorithm 1) as a bounded vectorized probe sequence.
 
+Cost model (DESIGN.md section 9): traversal work is *depth-exact* — the trip
+count is the snapshot's true `max_depth` (derived via `resolve_max_depth`,
+never hard-coded), and the `early_exit` variant stops the whole batch as soon
+as every lane is done, so a batch whose lanes all bottom out at height 3 pays
+3 rounds of gathers, not a fixed worst-case scan.  Range queries bisect the
+key-sorted pair table built at flatten() time — O(log n + max_hits) per
+query — instead of mask-scanning the global slot table.
+
 All functions take the snapshot as a dict of jnp arrays (see `device_arrays`)
 so they can be jitted/donated and fed to shard_map without re-tracing on every
 publish (shapes are padded to powers of two).
@@ -48,25 +56,93 @@ def _pad_pow2(x: np.ndarray, fill) -> np.ndarray:
 
 def device_arrays(flat: FlatDILI, dtype=jnp.float64, pad: bool = True) -> dict:
     """Upload the snapshot; pads table lengths to powers of two so republishes
-    reuse the compiled search executable."""
+    reuse the compiled search executable.
+
+    Besides the column tables, the hot traversal reads two row-packed
+    mirrors: `node_pack` [n_nodes, 4] = (a, b, base, fo*±1 with the sign
+    carrying the dense flag) and `slot_pack` [n_slots, 2] = (key, tag).  One
+    level of the walk is then 3 gathers (node row, slot row, payload) instead
+    of 8 — each gather is a full memory pass over the batch, so this is the
+    single biggest lever on lookup cost.  base/fo are exact in the float
+    mantissa (<2^53 at f64; the f32 path keeps tables under 2^24 slots by
+    the VMEM-budget dispatch).
+    """
     f = flat
-    ap, bp = (np.asarray(f.a), np.asarray(f.b))
     conv = (lambda x, fill: _pad_pow2(x, fill)) if pad else (lambda x, fill: x)
-    return dict(
-        a=jnp.asarray(conv(ap, 0.0), dtype),
-        b=jnp.asarray(conv(bp, 0.0), dtype),
-        base=jnp.asarray(conv(f.base, 0), jnp.int32),
-        fo=jnp.asarray(conv(f.fo, 1), jnp.int32),
-        dense=jnp.asarray(conv(f.dense, 0), jnp.int8),
-        tag=jnp.asarray(conv(f.tag, TAG_EMPTY), jnp.int8),
-        key=jnp.asarray(conv(f.key, 0.0), dtype),
+    av = conv(np.asarray(f.a), 0.0)
+    bv = conv(np.asarray(f.b), 0.0)
+    basev = conv(f.base, 0)
+    fov = conv(f.fo, 1)
+    densev = conv(f.dense, 0)
+    tagv = conv(f.tag, TAG_EMPTY)
+    keyv = conv(f.key, 0.0)
+    out = dict(
+        a=jnp.asarray(av, dtype),
+        b=jnp.asarray(bv, dtype),
+        base=jnp.asarray(basev, jnp.int32),
+        fo=jnp.asarray(fov, jnp.int32),
+        dense=jnp.asarray(densev, jnp.int8),
+        tag=jnp.asarray(tagv, jnp.int8),
+        key=jnp.asarray(keyv, dtype),
         # payloads keep the snapshot's int64 width — serving payloads (KV slot
         # ids, document offsets) may exceed 2^31 (requires x64; under x32 jax
         # silently narrows, matching the f32 kernel path)
         val=jnp.asarray(conv(f.val, -1), jnp.int64),
+        # key-sorted pair table (range queries); +inf pads keep searchsorted
+        # honest past the populated prefix.  pair_slot (slot ranks) stays
+        # host-side on FlatDILI — no device path reads it.
+        pair_key=jnp.asarray(conv(f.pair_key, np.inf), dtype),
+        pair_val=jnp.asarray(conv(f.pair_val, -1), jnp.int64),
         root=jnp.int32(f.root),
         max_depth=jnp.int32(f.max_depth),
+        # static metadata (host Python bool, stripped before jit): standard
+        # DILI builds have no dense leaves at all, so the whole Alg.-1 dense
+        # probe (32 fixed gather trips) is skipped unless one exists
+        has_dense=bool(np.asarray(f.dense).any()),
     )
+    # packed mirrors need slot indices exact in the float mantissa; a narrow
+    # dtype on a big table falls back to the column layout.  The columns stay
+    # resident alongside the mirrors: the dense probe reads tag/key, the
+    # post-loop dense check reads dense, and the epoch publisher's retrace
+    # detection keys on column shapes — the mirrors only add ~50% node/slot
+    # bytes, cheap next to a second hot-path memory pass per level.
+    if jnp.finfo(dtype).nmant >= 52 or len(tagv) < (1 << 24):
+        out["node_pack"] = jnp.asarray(np.stack(
+            [av, bv, basev.astype(np.float64),
+             (fov * np.where(densev > 0, -1, 1)).astype(np.float64)],
+            axis=1), dtype)
+        out["slot_pack"] = jnp.asarray(
+            np.stack([keyv, tagv.astype(np.float64)], axis=1), dtype)
+    return out
+
+
+def resolve_max_depth(idx: dict) -> int:
+    """The snapshot's true traversal depth, as a static int.
+
+    Every search call site derives its trip count from the snapshot through
+    here (or passes a depth it got from `FlatDILI.max_depth` /
+    `SnapshotStore.max_depth` / `ShardedDILI.max_depth`) — hard-coded depths
+    are a bug.  Raises inside traced code, where the depth must be threaded
+    in explicitly as a Python int.
+    """
+    md = idx["max_depth"]
+    if isinstance(md, jax.core.Tracer):
+        raise TypeError(
+            "resolve_max_depth() needs a concrete snapshot; inside jit/"
+            "shard_map pass max_depth explicitly as a static Python int")
+    return int(md)
+
+
+def _split_static(idx: dict) -> tuple[dict, bool]:
+    """Strip host-static metadata from the snapshot dict before it crosses a
+    jit boundary; returns (array-only dict, has_dense).  `has_dense` defaults
+    to True (always-correct) when absent or already traced."""
+    hd = idx.get("has_dense", True)
+    if not isinstance(hd, (bool, np.bool_)):
+        hd = True
+    if "has_dense" in idx:
+        idx = {k: v for k, v in idx.items() if k != "has_dense"}
+    return idx, bool(hd)
 
 
 # ---------------------------------------------------------------------------
@@ -74,24 +150,30 @@ def device_arrays(flat: FlatDILI, dtype=jnp.float64, pad: bool = True) -> dict:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth", "with_stats"))
-def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int = 24,
-                 with_stats: bool = False):
-    """Point lookups. Returns (values, found) — values only valid where found.
-
-    with_stats additionally returns (nodes_visited, slot_probes) per query —
-    the Table-5 cache-miss proxy (each node visit + slot probe = one
-    HBM/cache-line touch in the paper's cost model).
-    """
-    q = queries
-    # derive carries from q so their varying-manual-axes match inside
-    # shard_map bodies (constants would be vma-unvarying and break scan)
-    zi = (q * 0).astype(jnp.int32)
-    zb = zi > 0
-    n0 = zi + idx["root"]
-
-    def body(state, _):
+def _traverse_step(idx: dict, q, state, with_stats: bool):
+    """One level of the unified traversal; shared by the fixed-trip scan and
+    the convergence early-exit while_loop."""
+    if with_stats:
         n, done, val, found, nodes, probes = state
+    else:
+        n, done, val, found = state
+    if "node_pack" in idx:
+        # row-packed fast path: one node-row gather + one slot-row gather
+        # (+ the payload) instead of eight scalar-column gathers per level
+        npk = idx["node_pack"][n]                   # [Q, 4]
+        a = npk[..., 0]
+        b = npk[..., 1]
+        base = npk[..., 2].astype(jnp.int32)
+        fo_s = npk[..., 3].astype(jnp.int32)
+        is_dense = fo_s < 0
+        fo = jnp.where(is_dense, -fo_s, fo_s)
+        pos = predict_slot(a, b, q, fo)
+        s = base + pos
+        spk = idx["slot_pack"][s]                   # [Q, 2]
+        sk = spk[..., 0]
+        t = spk[..., 1].astype(jnp.int8)
+    else:
+        # column layout (stacked shard tables, kernel fallback dicts)
         a = idx["a"][n]
         b = idx["b"][n]
         fo = idx["fo"][n]
@@ -100,33 +182,98 @@ def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int = 24,
         s = idx["base"][n] + pos
         t = idx["tag"][s]
         sk = idx["key"][s]
-        sv = idx["val"][s]
-        step_active = ~done & ~is_dense
-        is_child = (t == TAG_CHILD) & step_active
-        hit = (t == TAG_PAIR) & (sk == q) & step_active
-        miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & step_active
-        val = jnp.where(hit, sv, val)
-        found = found | hit
-        n = jnp.where(is_child, sv.astype(jnp.int32), n)
-        done = done | hit | miss | (is_dense & ~done)
+    sv = idx["val"][s]
+    step_active = ~done & ~is_dense
+    is_child = (t == TAG_CHILD) & step_active
+    hit = (t == TAG_PAIR) & (sk == q) & step_active
+    miss = ((t == TAG_EMPTY) | ((t == TAG_PAIR) & (sk != q))) & step_active
+    val = jnp.where(hit, sv, val)
+    found = found | hit
+    n = jnp.where(is_child, sv.astype(jnp.int32), n)
+    done = done | hit | miss | (is_dense & ~done)
+    if with_stats:
         nodes = nodes + step_active.astype(jnp.int32)
         probes = probes + step_active.astype(jnp.int32)
-        return (n, done, val, found, nodes, probes), None
+        return (n, done, val, found, nodes, probes)
+    return (n, done, val, found)
 
-    init = (n0, zb, (zi - 1).astype(idx["val"].dtype), zb, zi, zi)
-    (n, done, val, found, nodes, probes), _ = jax.lax.scan(
-        body, init, None, length=max_depth)
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_depth", "with_stats", "early_exit",
+                                    "has_dense"))
+def _search_batch(idx: dict, queries: jnp.ndarray, max_depth: int,
+                  with_stats: bool = False, early_exit: bool = False,
+                  has_dense: bool = True):
+    q = queries
+    # derive carries from q so their varying-manual-axes match inside
+    # shard_map bodies (constants would be vma-unvarying and break scan)
+    zi = (q * 0).astype(jnp.int32)
+    zb = zi > 0
+    n0 = zi + idx["root"]
+
+    init = (n0, zb, (zi - 1).astype(idx["val"].dtype), zb)
+    if with_stats:
+        init = init + (zi, zi)
+
+    if early_exit:
+        # convergence early exit: the whole batch stops gathering once every
+        # lane is done — a batch bottoming out at height h pays h rounds,
+        # not max_depth
+        def cond(st):
+            return (st[0] < max_depth) & ~jnp.all(st[2])
+
+        def body(st):
+            return (st[0] + 1,) + _traverse_step(idx, q, st[1:], with_stats)
+
+        out = jax.lax.while_loop(cond, body, (jnp.int32(0),) + init)
+        state = out[1:]
+    else:
+        def sbody(state, _):
+            return _traverse_step(idx, q, state, with_stats), None
+
+        state, _ = jax.lax.scan(sbody, init, None, length=max_depth)
+
+    if with_stats:
+        n, done, val, found, nodes, probes = state
+    else:
+        n, done, val, found = state
+
+    if not has_dense:
+        # snapshot has no dense leaves (standard DILI): Algorithm 1's probe
+        # phases (32 fixed gather trips) vanish from the computation
+        if with_stats:
+            return val, found, nodes, probes
+        return val, found
 
     # dense-leaf exit: exponential + binary search (Algorithm 1 lines 2-5)
     is_dense = idx["dense"][n] > 0
     dval, dfound, dprobes = _dense_search(idx, q, n)
     val = jnp.where(is_dense & dfound, dval, val)
     found = found | (is_dense & dfound)
-    nodes = nodes + is_dense.astype(jnp.int32)
-    probes = probes + jnp.where(is_dense, dprobes, 0)
     if with_stats:
+        nodes = nodes + is_dense.astype(jnp.int32)
+        probes = probes + jnp.where(is_dense, dprobes, 0)
         return val, found, nodes, probes
     return val, found
+
+
+def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int | None = None,
+                 with_stats: bool = False, early_exit: bool = False):
+    """Point lookups. Returns (values, found) — values only valid where found.
+
+    `max_depth=None` derives the trip count from the snapshot
+    (`resolve_max_depth`); pass it explicitly only inside traced code.
+    `early_exit=True` swaps the fixed-trip scan for a batch-convergence
+    while_loop.  `with_stats` additionally returns (nodes_visited,
+    slot_probes) per query — the Table-5 cache-miss proxy (each node visit +
+    slot probe = one HBM/cache-line touch in the paper's cost model).
+    """
+    if max_depth is None:
+        max_depth = resolve_max_depth(idx)
+    idx, has_dense = _split_static(idx)
+    return _search_batch(idx, queries, max_depth=max_depth,
+                         with_stats=with_stats, early_exit=early_exit,
+                         has_dense=has_dense)
 
 
 def _dense_search(idx: dict, q: jnp.ndarray, n: jnp.ndarray):
@@ -187,7 +334,7 @@ def _dense_search(idx: dict, q: jnp.ndarray, n: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
-# Overlay lookup + combined search
+# Overlay lookup + fused snapshot+overlay search
 # ---------------------------------------------------------------------------
 
 
@@ -221,44 +368,74 @@ def resolve_overlay(ov: dict, queries: jnp.ndarray, snap_vals: jnp.ndarray,
     return val, live | (snap_found & ~dead)
 
 
-def search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
-                        max_depth: int = 24):
-    """Overlay (recent writes) wins over the snapshot; tombstones hide
-    snapshot hits (DESIGN.md section 8)."""
-    v0, f0 = search_batch(idx, queries, max_depth)
+def _search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
+                         max_depth: int, early_exit: bool, has_dense: bool):
+    v0, f0 = _search_batch(idx, queries, max_depth=max_depth,
+                           early_exit=early_exit, has_dense=has_dense)
     return resolve_overlay(ov, queries, v0, f0)
 
 
-# ---------------------------------------------------------------------------
-# Range query: locate both endpoints, then mask-scan the slot table
-# ---------------------------------------------------------------------------
+_swo = jax.jit(_search_with_overlay, static_argnums=(3, 4, 5))
+_swo_donated = jax.jit(_search_with_overlay, static_argnums=(3, 4, 5),
+                       donate_argnums=(2,))
 
 
-@functools.partial(jax.jit, static_argnames=("max_hits", "max_depth"))
-def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
-                      max_hits: int = 128, max_depth: int = 24):
-    """For each (lo, hi): gather up to max_hits pair keys in [lo, hi).
+def search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
+                        max_depth: int | None = None, *,
+                        early_exit: bool = True,
+                        donate_queries: bool = False):
+    """ONE fused jitted dispatch: snapshot traversal + overlay searchsorted,
+    resolving overlay-hit / overlay-tombstone / snapshot-hit (DESIGN.md
+    section 8).  The overlay (recent writes) wins over the snapshot;
+    tombstones hide snapshot hits.
 
-    DILI's entry arrays are not densely packed (Fig. 6b discussion), so a scan
-    must skip EMPTY/CHILD slots; we vectorize by scanning the *global* slot
-    table window around the leaf holding `lo` — leaves are laid out in BFS
-    order so siblings are contiguous (flat.py).
+    `donate_queries=True` donates the query buffer to the computation (the
+    caller must not reuse it) — skipped on CPU, which does not support
+    donation.  This is the serving read path: `SessionTable`/`OnlineIndex`
+    and the per-shard distributed reads route through it, so a query batch
+    costs one device dispatch, not a traversal dispatch plus an overlay
+    round-trip.
     """
-    tag = idx["tag"]
-    key = idx["key"]
+    if max_depth is None:
+        max_depth = resolve_max_depth(idx)
+    idx, has_dense = _split_static(idx)
+    donate = donate_queries and jax.default_backend() != "cpu"
+    fn = _swo_donated if donate else _swo
+    return fn(idx, ov, queries, max_depth, early_exit, has_dense)
 
-    in_range = (tag == TAG_PAIR)
 
-    def one(lo1, hi1):
-        sel = in_range & (key >= lo1) & (key < hi1)
-        # top-k by position: compress indices of selected slots
-        idxs = jnp.nonzero(sel, size=max_hits, fill_value=-1)[0]
-        ks = jnp.where(idxs >= 0, key[jnp.clip(idxs, 0, None)], jnp.inf)
-        vs = jnp.where(idxs >= 0, idx["val"][jnp.clip(idxs, 0, None)], -1)
-        order = jnp.argsort(ks)
-        return ks[order], vs[order], (idxs >= 0).sum()
+# ---------------------------------------------------------------------------
+# Range query: bisect the sorted pair table, gather one bounded window
+# ---------------------------------------------------------------------------
 
-    return jax.vmap(one)(lo, hi)
+
+@functools.partial(jax.jit, static_argnames=("max_hits",))
+def _range_query(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray, max_hits: int):
+    pk = idx["pair_key"]
+    start = jnp.searchsorted(pk, lo, side="left")           # [Q]
+    end = jnp.searchsorted(pk, hi, side="left")             # [Q]
+    cnt = jnp.maximum(end - start, 0)
+    offs = jnp.arange(max_hits)                             # [H]
+    valid = offs[None, :] < cnt[:, None]                    # [Q, H]
+    g = jnp.clip(start[:, None] + offs[None, :], 0, pk.shape[0] - 1)
+    ks = jnp.where(valid, pk[g], jnp.inf)
+    vs = jnp.where(valid, idx["pair_val"][g], -1)
+    return ks, vs, jnp.minimum(cnt, max_hits).astype(jnp.int32)
+
+
+def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
+                      max_hits: int = 128):
+    """For each (lo, hi): the first max_hits pair (key, val)s in [lo, hi),
+    ascending, plus the count (saturating at max_hits).
+
+    Two searchsorted bisections of the flatten()-time key-sorted pair table
+    locate the window, then ONE bounded gather reads it — O(log n + max_hits)
+    per query.  (The previous implementation mask-scanned the entire global
+    slot table per query pair: O(n_slots), because DILI's entry arrays are
+    not densely packed — Fig. 6b discussion.  The pair table densifies them
+    once per publish instead.)
+    """
+    return _range_query(idx, lo, hi, max_hits=max_hits)
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +443,7 @@ def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def lookup_np(idx: dict, queries: np.ndarray, max_depth: int = 24):
-    v, f = search_batch(idx, jnp.asarray(queries), max_depth)
+def lookup_np(idx: dict, queries: np.ndarray, max_depth: int | None = None):
+    v, f = search_batch(idx, jnp.asarray(queries), max_depth,
+                        early_exit=True)
     return np.asarray(v), np.asarray(f)

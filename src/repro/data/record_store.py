@@ -56,7 +56,7 @@ class RecordStore:
     def lookup(self, keys) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched: returns (offsets, lengths, found)."""
         v, f = S.search_batch(self.idx, jnp.asarray(keys, jnp.float64),
-                              max_depth=self.flat.max_depth + 2)
+                              max_depth=self.flat.max_depth, early_exit=True)
         v = np.asarray(v).astype(np.int64)
         f = np.asarray(f)
         ords = np.where(f, v, 0)

@@ -71,15 +71,17 @@ def dili_search(arrs: dict, queries: jnp.ndarray, interpret: bool = True):
             max_depth=max_depth, interpret=interpret)
         if bool(jnp.any(fb)):
             # rare path: dense leaves / overflow — recheck those lanes in XLA
+            # (search_batch handles the dense exit itself, so the snapshot's
+            # exact depth is the right trip count here too)
             idx = _as_search_idx(arrs)
-            v2, f2 = core_search.search_batch(idx, qp,
-                                              max_depth=max_depth + 18)
+            v2, f2 = core_search.search_batch(idx, qp, max_depth=max_depth)
             out = jnp.where(fb, v2, out)
             found = jnp.where(fb, f2, found)
         return out[:nq], found[:nq]
 
     idx = _as_search_idx(arrs)
-    v, f = core_search.search_batch(idx, qp, max_depth=max_depth + 2)
+    v, f = core_search.search_batch(idx, qp, max_depth=max_depth,
+                                    early_exit=True)
     return v[:nq], f[:nq]
 
 

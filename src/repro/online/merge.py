@@ -31,7 +31,7 @@ from ..core.dili import DILI, LAMBDA, bulk_load
 from ..core.flat import flatten
 from .epoch import EpochStats, SnapshotStore
 from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
-                      overlay_device_arrays, search_with_updates)
+                      overlay_device_arrays)
 
 
 @dataclass(frozen=True)
@@ -188,10 +188,14 @@ class OnlineIndex:
         return self._ov_arrays
 
     def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
-        """Batched fused snapshot+overlay lookup -> (vals, found)."""
+        """Batched fused snapshot+overlay lookup -> (vals, found): one jitted
+        dispatch, depth-exact, query buffer donated (it is freshly uploaded
+        here, so the read path never copies it back)."""
+        from ..core import search as S
         q = jnp.asarray(queries, self.store.dtype)
-        v, f = search_with_updates(self.store.idx, self._overlay_arrays(), q,
-                                   max_depth=self.store.max_depth + 2)
+        v, f = S.search_with_overlay(self.store.idx, self._overlay_arrays(),
+                                     q, max_depth=self.store.max_depth,
+                                     donate_queries=q is not queries)
         return np.asarray(v), np.asarray(f)
 
     def get(self, key: float) -> int | None:

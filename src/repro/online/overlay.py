@@ -23,14 +23,13 @@ holding epoch N's overlay mirror is never invalidated mid-lookup.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import search as S
+from ..core.flat import merge_sorted_runs
 
 LIVE, TOMBSTONE = 0, 1
 
@@ -54,17 +53,15 @@ class TombstoneOverlay:
 
     def _apply(self, k: np.ndarray, v: np.ndarray,
                t: np.ndarray) -> "TombstoneOverlay":
-        nk = np.concatenate([self.keys[: self.count], np.asarray(k, np.float64)])
-        nv = np.concatenate([self.vals[: self.count], np.asarray(v, np.int64)])
-        nt = np.concatenate([self.tomb[: self.count], np.asarray(t, np.int8)])
-        if len(nk) == 0:
+        if len(k) == 0 and self.count == 0:
             return self
-        order = np.argsort(nk, kind="stable")
-        nk, nv, nt = nk[order], nv[order], nt[order]
-        # last-write-wins: newer entries sorted after older ones (stable sort,
-        # new batch concatenated last), keep the final entry per key
-        keep = np.append(np.diff(nk) != 0, True)
-        nk, nv, nt = nk[keep], nv[keep], nt[keep]
+        # the buffer is a sorted run: merge the batch in (last-write-wins)
+        # instead of re-sorting the whole buffer on every write batch
+        nk, (nv, nt) = merge_sorted_runs(
+            self.keys[: self.count],
+            (self.vals[: self.count], self.tomb[: self.count]),
+            np.asarray(k, np.float64),
+            (np.asarray(v, np.int64), np.asarray(t, np.int8)))
         cap = self.cap
         while len(nk) > cap:
             cap *= 2
@@ -142,10 +139,11 @@ def overlay_device_arrays(ov: TombstoneOverlay, dtype=jnp.float64) -> dict:
                 tomb=jnp.asarray(ov.tomb, jnp.int8))
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth",))
 def search_with_updates(idx: dict, ov: dict, queries: jnp.ndarray,
-                        max_depth: int = 24):
+                        max_depth: int | None = None):
     """One fused pass: snapshot traversal (search_batch) + overlay
-    searchsorted, resolving overlay-hit / overlay-tombstone / snapshot-hit."""
-    v0, f0 = S.search_batch(idx, queries, max_depth)
-    return S.resolve_overlay(ov, queries, v0, f0)
+    searchsorted, resolving overlay-hit / overlay-tombstone / snapshot-hit.
+
+    Thin alias of `core.search.search_with_overlay` (the single fused jitted
+    dispatch); the depth defaults to the snapshot's own `max_depth`."""
+    return S.search_with_overlay(idx, ov, queries, max_depth)

@@ -5,7 +5,9 @@ subsystem (`repro.online`): writes land in the tombstone overlay and the
 merge policy decides when to fold them through the host DILI (Algorithms
 7/8) and publish a fresh snapshot epoch — ONE `flatten()` per merge, never
 per admit/evict.  The hot lookup path is the fused snapshot+overlay device
-search, exact at every point between merges (DESIGN.md section 8).
+search (`core.search.search_with_overlay`): one jitted dispatch per query
+batch, depth-exact with batch-convergence early exit, query buffer donated —
+exact at every point between merges (DESIGN.md sections 8-9).
 """
 
 from __future__ import annotations

@@ -1,0 +1,93 @@
+"""Property-based tests for the sorted-pair range path: the device
+`range_query_batch` (two searchsorted bisections + bounded window gather)
+must match a brute-force numpy oracle on random keys and random — possibly
+empty or inverted — windows, including `max_hits` truncation.
+
+hypothesis is an optional extra (see requirements.txt); the importorskip
+guard keeps `pytest -x -q` collecting when it is absent.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import search as S                        # noqa: E402
+from repro.core.dili import bulk_load                     # noqa: E402
+from repro.core.flat import flatten                       # noqa: E402
+
+_idx_cache: dict = {}
+
+
+def _index_for(seed: int):
+    """One index per seed (bulk_load is the expensive part, not the claim
+    under test)."""
+    if seed not in _idx_cache:
+        rng = np.random.default_rng(seed)
+        keys = np.unique(rng.uniform(0.0, 1000.0, 600))
+        d = bulk_load(keys)
+        _idx_cache[seed] = (keys, S.device_arrays(flatten(d)))
+    return _idx_cache[seed]
+
+
+def _oracle(keys: np.ndarray, lo: float, hi: float, max_hits: int):
+    sel = keys[(keys >= lo) & (keys < hi)]
+    vals = np.nonzero((keys >= lo) & (keys < hi))[0]   # bulk_load payload = rank
+    return sel[:max_hits], vals[:max_hits], min(len(sel), max_hits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 3),
+       st.lists(st.tuples(st.floats(-50.0, 1050.0), st.floats(-50.0, 1050.0)),
+                min_size=1, max_size=24),
+       st.sampled_from([1, 7, 32, 128]))
+def test_range_matches_numpy_oracle(seed, windows, max_hits):
+    keys, idx = _index_for(seed)
+    lo = np.array([w[0] for w in windows])
+    hi = np.array([w[1] for w in windows])
+    ks, vs, counts = S.range_query_batch(idx, jnp.asarray(lo),
+                                         jnp.asarray(hi), max_hits=max_hits)
+    ks, vs, counts = np.asarray(ks), np.asarray(vs), np.asarray(counts)
+    for i in range(len(windows)):
+        ek, ev, ec = _oracle(keys, lo[i], hi[i], max_hits)
+        assert counts[i] == ec, (lo[i], hi[i])
+        assert np.array_equal(ks[i][:ec], ek)
+        assert np.array_equal(vs[i][:ec], ev)
+        # past the count: inert fills, keys padded to +inf
+        assert np.all(ks[i][ec:] == np.inf)
+        assert np.all(vs[i][ec:] == -1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-50.0, 1050.0), st.floats(0.0, 30.0))
+def test_range_empty_and_inverted_windows(lo, width):
+    """Empty ([x, x)) and inverted (hi < lo) windows return count 0."""
+    keys, idx = _index_for(0)
+    lo_b = jnp.asarray([lo, lo, lo + width])
+    hi_b = jnp.asarray([lo, lo - width, lo])    # empty, inverted, inverted
+    ks, vs, counts = S.range_query_batch(idx, lo_b, hi_b, max_hits=16)
+    counts = np.asarray(counts)
+    assert counts[0] == 0 and counts[2] == 0
+    if width > 0:
+        assert counts[1] == 0
+    assert np.all(np.asarray(ks)[np.asarray(counts) == 0] == np.inf)
+
+
+def test_range_exact_key_boundaries():
+    """[k_i, k_j) is inclusive of k_i, exclusive of k_j — on exact keys."""
+    keys, idx = _index_for(1)
+    ks, vs, counts = S.range_query_batch(
+        idx, jnp.asarray([keys[10]]), jnp.asarray([keys[20]]), max_hits=64)
+    assert int(np.asarray(counts)[0]) == 10
+    assert np.array_equal(np.asarray(ks)[0][:10], keys[10:20])
+
+
+def test_range_truncation_is_ascending_prefix():
+    """max_hits truncation keeps the FIRST hits ascending from lo (a stable
+    prefix, not an arbitrary subset)."""
+    keys, idx = _index_for(2)
+    ks, vs, counts = S.range_query_batch(
+        idx, jnp.asarray([keys[0]]), jnp.asarray([keys[-1]]), max_hits=8)
+    assert int(np.asarray(counts)[0]) == 8
+    assert np.array_equal(np.asarray(ks)[0], keys[:8])

@@ -128,6 +128,81 @@ def test_republish_after_updates(snap):
     assert not np.asarray(f3).any()
 
 
+def _scan_lengths(closed_jaxpr) -> list:
+    """All lax.scan trip counts reachable from a jaxpr (recursing through
+    pjit / scan / while / custom calls)."""
+    out = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(int(eqn.params["length"]))
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                    walk(v.jaxpr)
+                elif hasattr(v, "eqns"):         # raw Jaxpr
+                    walk(v)
+    walk(closed_jaxpr.jaxpr)
+    return out
+
+
+def test_traversal_depth_exact_not_24(snap):
+    """Regression: the traversal scan length must be the snapshot's true
+    max_depth (derived via resolve_max_depth), not a hard-coded 24-trip
+    worst case — and exactly max_depth trips must already find every key."""
+    keys, d, f, idx = snap
+    assert S.resolve_max_depth(idx) == f.max_depth
+    rng = np.random.default_rng(17)
+    q = jnp.asarray(keys[rng.integers(0, len(keys), 2048)])
+    v, fnd = S.search_batch(idx, q)          # depth derived from the snapshot
+    assert bool(np.asarray(fnd).all())
+    lengths = _scan_lengths(
+        jax.make_jaxpr(lambda q: S.search_batch(idx, q))(q))
+    assert f.max_depth in lengths            # traversal is depth-exact
+    # nothing scans 24 trips (or anything beyond the dense-probe phases)
+    assert all(ln <= max(16, f.max_depth) for ln in lengths), lengths
+
+
+def test_early_exit_matches_scan(snap):
+    """The batch-convergence while_loop variant is bit-identical to the
+    fixed-trip scan, including stats."""
+    keys, d, f, idx = snap
+    rng = np.random.default_rng(18)
+    mids = (keys[:-1] + keys[1:]) / 2        # mix hits and misses
+    q = jnp.asarray(np.concatenate([keys[rng.integers(0, len(keys), 1024)],
+                                    mids[rng.integers(0, len(mids), 1024)]]))
+    v1, f1 = S.search_batch(idx, q, early_exit=False)
+    v2, f2 = S.search_batch(idx, q, early_exit=True)
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+    s1 = S.search_batch(idx, q, with_stats=True, early_exit=False)
+    s2 = S.search_batch(idx, q, with_stats=True, early_exit=True)
+    for a, b in zip(s1, s2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resolve_max_depth_rejects_tracers(snap):
+    keys, d, f, idx = snap
+    with pytest.raises(TypeError):
+        jax.jit(lambda i: S.resolve_max_depth(i))(idx)
+
+
+def test_fused_overlay_single_dispatch(snap):
+    """search_with_overlay is ONE jitted computation: its jaxpr top level is
+    a single pjit call (traversal + overlay resolution fused)."""
+    from repro.online.overlay import TombstoneOverlay, overlay_device_arrays
+    keys, d, f, idx = snap
+    ova = overlay_device_arrays(
+        TombstoneOverlay.empty(16).upsert_batch([keys[3]], [42]))
+    q = jnp.asarray(keys[:8])
+    jaxpr = jax.make_jaxpr(
+        lambda q: S.search_with_overlay(idx, ova, q, f.max_depth))(q)
+    assert [e.primitive.name for e in jaxpr.jaxpr.eqns] == ["pjit"]
+    v, fnd = S.search_with_overlay(idx, ova, q)
+    assert bool(np.asarray(fnd).all())
+    assert int(np.asarray(v)[3]) == 42
+
+
 def test_range_query_batch(snap):
     keys, d, f, idx = snap
     lo = jnp.asarray([keys[50], keys[500]])
