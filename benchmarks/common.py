@@ -13,11 +13,13 @@ import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
 
-from repro.core import search as S                    # noqa: E402
-from repro.core.baselines import ALL_BASELINES        # noqa: E402
+from repro.api import (DeviceSnapshot, IndexConfig, LearnedIndex,  # noqa: E402
+                       manual_merge_policy)
+from repro.core import search as S                    # noqa: E402,F401
+from repro.core.baselines import ALL_BASELINES        # noqa: E402,F401
 from repro.core.dili import bulk_load                 # noqa: E402
 from repro.core.flat import flatten                   # noqa: E402
-from repro.data.datasets import ALL_DATASETS, generate  # noqa: E402
+from repro.data.datasets import ALL_DATASETS, generate  # noqa: E402,F401
 
 N_KEYS = int(os.environ.get("BENCH_N_KEYS", "300000"))
 N_QUERIES = int(os.environ.get("BENCH_N_QUERIES", "65536"))
@@ -33,12 +35,26 @@ def dataset(name: str) -> np.ndarray:
 
 
 def dili_for(name: str, **kw):
+    """(keys, host DILI, FlatDILI, DeviceSnapshot) — the snapshot is the
+    typed pytree every `core.search` entry point accepts directly."""
     key = ("dili", name, tuple(sorted(kw.items())))
     if key not in _cache:
         keys = dataset(name)
         d = bulk_load(keys, sample_stride=4, **kw)
         f = flatten(d)
-        _cache[key] = (keys, d, f, S.device_arrays(f))
+        _cache[key] = (keys, d, f, DeviceSnapshot.from_flat(f))
+    return _cache[key]
+
+
+def index_for(name: str, engine: str) -> LearnedIndex:
+    """A `LearnedIndex` over `dataset(name)` on the requested engine
+    (manual merge policy: benchmark writes never trigger implicit folds)."""
+    key = ("facade", engine, name)
+    if key not in _cache:
+        _cache[key] = LearnedIndex.build(
+            dataset(name),
+            config=IndexConfig(engine=engine, sample_stride=4,
+                               merge=manual_merge_policy()))
     return _cache[key]
 
 

@@ -14,9 +14,11 @@ query instead of the old O(n_slots) global slot-table mask-scan.  So lookup
 cost scales with tree height and range cost with hits, not with table size.
 
 ``--json PATH`` additionally writes every row machine-readably;
-``--pr2-json`` emits BENCH_PR2.json — the PR-2 acceptance artifact comparing
-the hot paths against benchmarks/baseline_pre_pr2.json (captured on the
-pre-PR tree with the same datasets/scales).
+``--pr2-json`` emits BENCH_PR2.json — the hot-path trajectory artifact
+comparing against benchmarks/baseline_pre_pr2.json (captured on the pre-PR-2
+tree with the same datasets/scales), extended since the api redesign with
+facade sections measured through `repro.api.LearnedIndex` on the engine
+selected by ``--engine {local,pallas,sharded}``.
 """
 
 from __future__ import annotations
@@ -34,13 +36,17 @@ import jax
 import jax.numpy as jnp
 
 from common import (DATASETS, N_QUERIES, baseline_for, csv_row, dataset,
-                    dili_for, queries_for, time_fn)
+                    dili_for, index_for, queries_for, time_fn)
 
+from repro.api import DeviceSnapshot                    # noqa: E402
 from repro.core import search as S                      # noqa: E402
 from repro.core.baselines import ALL_BASELINES          # noqa: E402
 from repro.core.bu_tree import build_bu_tree, bu_search  # noqa: E402
 from repro.core.dili import bulk_load                   # noqa: E402
 from repro.core.flat import flatten                     # noqa: E402
+
+# engine under test for the facade sections / --pr2-json (set by --engine)
+ENGINE = "local"
 
 
 def _dili_lookup_time(name: str, **kw) -> tuple[float, dict]:
@@ -192,7 +198,7 @@ def table78_hyperparams():
     for rho in (0.05, 0.1, 0.2, 0.5):
         d = bulk_load(keys, cm=CostModel(rho=rho), sample_stride=4)
         f = flatten(d)
-        idx = S.device_arrays(f)
+        idx = DeviceSnapshot.from_flat(f)
         t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         s = d.stats()
         csv_row(f"table7,rho={rho}", t / N_QUERIES * 1e9,
@@ -209,7 +215,7 @@ def table78_hyperparams():
             d.insert(float(k), j)
         t_ins = (_t.perf_counter() - t0) / len(other)
         f = flatten(d)
-        idx = S.device_arrays(f)
+        idx = DeviceSnapshot.from_flat(f)
         t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         s = d.stats()
         csv_row(f"table8,lambda={lam}", t / N_QUERIES * 1e9,
@@ -293,7 +299,7 @@ def fig9_scale():
         keys = generate("fb", n, seed=42)
         d = bulk_load(keys, sample_stride=4)
         f = flatten(d)
-        idx = S.device_arrays(f)
+        idx = DeviceSnapshot.from_flat(f)
         q = jnp.asarray(keys[rng.integers(0, n, N_QUERIES)])
         t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
         csv_row(f"fig9a,n={n}", t / N_QUERIES * 1e9)
@@ -387,12 +393,11 @@ def kernel_bench():
     csv_row("kernel,pallas_interpret", t / 16384 * 1e9,
             f"table_bytes={K.table_bytes(arrs)}")
     idx = K._as_search_idx(arrs)
-    t2 = time_fn(lambda q: S2.search_batch(idx, q, max_depth=f.max_depth,
-                                           early_exit=True), q)
+    # depth resolves from the snapshot's own max_depth entry — no threading
+    t2 = time_fn(lambda q: S2.search_batch(idx, q, early_exit=True), q)
     csv_row("kernel,xla_f32", t2 / 16384 * 1e9)
     # roofline: bytes/query on the device path (node+slot rows touched)
-    v, fnd, nodes, probes = S2.search_batch(idx, q, max_depth=f.max_depth,
-                                            with_stats=True)
+    v, fnd, nodes, probes = S2.search_batch(idx, q, with_stats=True)
     node_row, slot_row = 17, 9      # f32 snapshot row sizes
     bpq = float(np.asarray(nodes).mean()) * node_row \
         + float(np.asarray(probes).mean()) * slot_row
@@ -400,16 +405,48 @@ def kernel_bench():
             "v5e HBM roofline: 819e9/bytes_per_query lookups/s/chip")
 
 
+def _facade_measure(name: str) -> tuple[float, float]:
+    """One measurement recipe for the facade serving path (shared by
+    facade_bench and the BENCH_PR2.json facade sections so the two can
+    never drift): lookup ns/query over the standard query draw, and range
+    us/query over 512 100-key windows, through `LearnedIndex` on ENGINE.
+    Numbers include the host<->device boundary the facade owns."""
+    ix = index_for(name, ENGINE)
+    keys = dataset(name)
+    q = queries_for(name)
+    t = time_fn(lambda: ix.lookup(q))
+    v, f = ix.lookup(q[:4096])
+    assert bool(f.all()), (ENGINE, name)
+    rng = np.random.default_rng(3)
+    starts = rng.integers(0, len(keys) - 101, 512)
+    tr = time_fn(lambda: ix.range(keys[starts], keys[starts + 100],
+                                  max_hits=128))
+    return t / N_QUERIES * 1e9, tr / 512 * 1e6
+
+
+def facade_bench():
+    """LearnedIndex end-to-end on the engine selected by --engine."""
+    print(f"# facade: LearnedIndex on the '{ENGINE}' engine")
+    for name in DATASETS:
+        lookup_ns, range_us = _facade_measure(name)
+        csv_row(f"facade,{ENGINE},{name},lookup_ns", lookup_ns,
+                f"max_depth={index_for(name, ENGINE).stats()['max_depth']}")
+        csv_row(f"facade,{ENGINE},{name},range_us", range_us)
+
+
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
        table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
-       kernel_bench]
+       kernel_bench, facade_bench]
 
 
 def bench_pr2(out_path: str) -> dict:
-    """PR-2 acceptance artifact: re-measure the two overhauled hot paths and
-    record them ALONGSIDE the pre-PR numbers (benchmarks/baseline_pre_pr2.json,
-    captured on the pre-PR tree at the same scales) with derived speedups."""
+    """Hot-path trajectory artifact (BENCH_PR2.json): re-measure the PR-2
+    hot paths ALONGSIDE the pre-PR numbers (benchmarks/baseline_pre_pr2.json,
+    captured on the pre-PR tree at the same scales) with derived speedups.
+    Since the api redesign the same file also records the facade numbers for
+    the engine selected by --engine (same schema, new `engine` field +
+    `facade_*` sections) — one format, extended, per ROADMAP."""
     import json
     from common import N_KEYS
     base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -426,6 +463,7 @@ def bench_pr2(out_path: str) -> dict:
     print("# PR2: hot-path trajectory vs pre-PR baseline")
     out: dict = dict(n_keys=N_KEYS, n_queries=N_QUERIES,
                      baseline_n_keys=baseline.get("n_keys"),
+                     engine=ENGINE,
                      cost_model="depth-exact traversal + early exit; "
                                 "O(log n + max_hits) sorted-pair ranges",
                      sections={})
@@ -459,6 +497,15 @@ def bench_pr2(out_path: str) -> dict:
         csv_row(f"pr2,range_query,{name}", new_us,
                 f"pre_pr={old_us};speedup="
                 f"{(old_us / new_us) if old_us else float('nan'):.2f}x")
+        # facade serving path on the selected engine (host<->device
+        # included) — same recipe as `--only facade` (_facade_measure)
+        lookup_ns, range_us = _facade_measure(name)
+        out["sections"][f"facade_lookup,{name}"] = dict(
+            ns_per_query=lookup_ns, engine=ENGINE)
+        out["sections"][f"facade_range,{name}"] = dict(
+            us_per_query=range_us, engine=ENGINE)
+        csv_row(f"pr2,facade_lookup,{name}", lookup_ns, f"engine={ENGINE}")
+        csv_row(f"pr2,facade_range,{name}", range_us, f"engine={ENGINE}")
     with open(out_path, "w") as fh:
         json.dump(out, fh, indent=1)
     print(f"# wrote {out_path}")
@@ -476,7 +523,13 @@ def main() -> None:
     ap.add_argument("--pr2-json", default="",
                     help="write the BENCH_PR2.json hot-path trajectory here "
                          "(skips the per-table sections unless --only set)")
+    ap.add_argument("--engine", default="local",
+                    choices=("local", "pallas", "sharded"),
+                    help="LearnedIndex engine for the facade sections and "
+                         "--pr2-json")
     args = ap.parse_args()
+    global ENGINE
+    ENGINE = args.engine
     if not args.pr2_json or args.only:
         for fn in ALL:
             if args.only and args.only not in fn.__name__:

@@ -1,5 +1,7 @@
-"""Distributed DILI: range-partitioned index over an 8-device mesh with the
-learned router + all_to_all/gather lookups.
+"""Distributed DILI through the facade: the sharded engine range-partitions
+the key space over an 8-device mesh (learned router = quantile boundaries),
+with per-shard overlays for online updates — all behind the same
+`LearnedIndex` API as the local engine.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_ENABLE_X64=1 \\
         PYTHONPATH=src python examples/distributed_index.py
@@ -13,10 +15,9 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import build_sharded, sharded_lookup, to_mesh
+from repro.api import IndexConfig, LearnedIndex
 from repro.data.datasets import generate
 
 
@@ -24,44 +25,50 @@ def main():
     n_dev = len(jax.devices())
     print(f"devices: {n_dev}")
     keys = generate("books", 200_000, seed=2)
-    sd = build_sharded(keys, None, n_shards=n_dev, sample_stride=4)
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    arrs = to_mesh(sd, mesh)
-
     rng = np.random.default_rng(1)
     qi = rng.integers(0, len(keys), 8192)
-    q = jnp.asarray(keys[qi])
+    q = keys[qi]
 
     for strategy in ("gather", "a2a"):
-        out = sharded_lookup(mesh, arrs, q, sd.max_depth, strategy=strategy)
-        v, f = out[0], out[1]
-        jax.block_until_ready(v)
+        ix = LearnedIndex.build(
+            keys, config=IndexConfig(engine="sharded", sample_stride=4,
+                                     lookup_strategy=strategy))
+        ix.lookup(q)                                   # compile/warm
         t0 = time.time()
-        out = sharded_lookup(mesh, arrs, q, sd.max_depth, strategy=strategy)
-        jax.block_until_ready(out[0])
+        v, f = ix.lookup(q)
         dt = time.time() - t0
-        ok = np.asarray(out[1])
-        correct = np.array_equal(np.asarray(out[0])[ok], qi[ok])
-        print(f"{strategy:7s}: found {int(ok.sum())}/{len(ok)} "
+        correct = np.array_equal(v[f], qi[f])
+        print(f"{strategy:7s}: found {int(f.sum())}/{len(f)} "
               f"correct={correct}  {len(qi) / dt / 1e3:.0f}K lookups/s")
-        if strategy == "a2a":
-            print(f"         overflow dropped: {int(np.asarray(out[2]).sum())}"
-                  " (capacity-bounded routing; gather path is exact)")
+        if strategy != "gather":
+            continue
 
-    # indexed range queries: per-shard sorted-pair bisection + psum assembly
-    from repro.core.distributed import sharded_range_query
-    starts = rng.integers(0, len(keys) - 101, 4096)
-    lo = jnp.asarray(keys[starts])
-    hi = jnp.asarray(keys[starts + 100])
-    ks, vs, counts = sharded_range_query(mesh, arrs, lo, hi, max_hits=128)
-    jax.block_until_ready(ks)
-    t0 = time.time()
-    ks, vs, counts = sharded_range_query(mesh, arrs, lo, hi, max_hits=128)
-    jax.block_until_ready(ks)
-    dt = time.time() - t0
-    print(f"range  : {len(starts)} x 100-key windows, "
-          f"avg hits {float(np.asarray(counts).mean()):.1f}  "
-          f"{len(starts) / dt / 1e3:.0f}K ranges/s")
+        # online updates: per-shard overlays, visible before any merge
+        new = np.setdiff1d(np.unique(rng.uniform(keys[0], keys[-1], 2000)),
+                           keys)[:1024]
+        ix.upsert(new, 5_000_000 + np.arange(len(new)))
+        ix.delete(keys[qi[:256]])
+        vn, fn = ix.lookup(new)
+        _, fd = ix.lookup(np.unique(keys[qi[:256]]))
+        print(f"         upserts visible={bool(fn.all())}, "
+              f"deletes hidden={not fd.any()}  (pre-merge)")
+        ix.flush()                     # per-shard fold + republish
+        print(f"         after flush: epoch={ix.epoch}  "
+              f"stats={ix.stats()['pending_writes']} pending")
+
+        # indexed range queries: per-shard bisection + psum assembly
+        starts = rng.integers(0, len(keys) - 101, 4096)
+        ix2 = LearnedIndex.build(keys,
+                                 config=IndexConfig(engine="sharded",
+                                                    sample_stride=4))
+        ix2.range(keys[starts], keys[starts + 100])    # warm
+        t0 = time.time()
+        ks, vs, counts = ix2.range(keys[starts], keys[starts + 100],
+                                   max_hits=128)
+        dt = time.time() - t0
+        print(f"range  : {len(starts)} x 100-key windows, "
+              f"avg hits {float(counts.mean()):.1f}  "
+              f"{len(starts) / dt / 1e3:.0f}K ranges/s")
 
 
 if __name__ == "__main__":

@@ -1,63 +1,76 @@
-"""Quickstart: build a DILI over 1M lognormal keys, run batched device
-lookups, insert/delete, republish, and compare against baselines.
+"""Quickstart: build a DILI through the `repro.api.LearnedIndex` facade,
+run batched device lookups and range queries, write through the overlay,
+flush, and compare against baselines.  Engine choice is one flag:
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [local|pallas|sharded]
 """
 import os
 os.environ.setdefault("JAX_ENABLE_X64", "1")
 
+import sys
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import IndexConfig, LearnedIndex
 from repro.core import search as S
 from repro.core.baselines import BinS, RMI
-from repro.core.dili import bulk_load
-from repro.core.flat import flatten
 from repro.data.datasets import generate
 
 
 def main():
-    print("== DILI quickstart ==")
+    engine = sys.argv[1] if len(sys.argv) > 1 else "local"
+    print(f"== DILI quickstart ({engine} engine) ==")
     keys = generate("logn", 200_000, seed=1)
     vals = np.arange(len(keys), dtype=np.int64)
 
     t0 = time.time()
-    dili = bulk_load(keys, vals, sample_stride=4)
+    ix = LearnedIndex.build(keys, vals,
+                            config=IndexConfig(engine=engine,
+                                               sample_stride=4))
+    st = ix.stats()
     print(f"bulk load: {len(keys):,} keys in {time.time() - t0:.1f}s; "
-          f"stats: {dili.stats()}")
+          f"stats: {st}")
 
-    flat = flatten(dili)
-    idx = S.device_arrays(flat)
     rng = np.random.default_rng(0)
-    q = jnp.asarray(keys[rng.integers(0, len(keys), 8192)])
+    q = keys[rng.integers(0, len(keys), 8192)]
+    v, found = ix.lookup(q)
+    assert found.all()
+    print(f"batched lookup: 8192/8192 found; "
+          f"device bytes {st['device_bytes'] / 1e6:.1f} MB")
 
-    v, found = S.search_batch(idx, q)   # trip count from the snapshot
-    assert bool(found.all())
-    print(f"batched lookup: 8192/8192 found; index {flat.nbytes()/1e6:.1f} MB")
+    # range queries: O(log n + max_hits) sorted-pair bisection
+    starts = rng.integers(0, len(keys) - 101, 1024)
+    ks, vs, cnt = ix.range(keys[starts], keys[starts + 100], max_hits=128)
+    print(f"range: 1024 x 100-key windows, avg hits "
+          f"{float(cnt.mean()):.1f}")
 
-    # updates (Algorithms 7/8)
+    # updates (Algorithms 7/8): overlay-visible immediately, folded on flush
     new = np.setdiff1d(np.unique(rng.uniform(keys[0], keys[-1], 1000)), keys)
-    for i, k in enumerate(new):
-        dili.insert(float(k), 10_000_000 + i)
-    dili.delete(float(keys[5]))
-    flat2 = flatten(dili)
-    idx2 = S.device_arrays(flat2)
-    v2, f2 = S.search_batch(idx2, jnp.asarray(new), early_exit=True)
-    print(f"after {len(new)} inserts + 1 delete: all new keys found = "
-          f"{bool(f2.all())}; adjustments={dili.n_adjustments}")
+    ix.upsert(new, 10_000_000 + np.arange(len(new)))
+    ix.delete(keys[5])
+    v2, f2 = ix.lookup(new)
+    _, fdel = ix.lookup(keys[5])
+    print(f"after {len(new)} upserts + 1 delete (pre-flush): new keys found "
+          f"= {bool(f2.all())}, deleted hidden = {not fdel[0]}")
+    ix.flush()
+    v2, f2 = ix.lookup(new)
+    print(f"after flush: new keys found = {bool(f2.all())}; "
+          f"epoch = {ix.epoch}")
 
-    # baseline comparison
+    # baseline comparison (probe counts: the paper's cache-miss economy)
+    import jax.numpy as jnp
+    qd = jnp.asarray(q)
     for B in (BinS, RMI):
-        st = B.build(keys, vals)
-        _, fb, pr = B.lookup(B.device(st), q)
+        bst = B.build(keys, vals)
+        _, fb, pr = B.lookup(B.device(bst), qd)
         print(f"{B.name}: found={bool(np.asarray(fb).all())}, "
               f"avg probes={float(np.asarray(pr).mean()):.1f}")
-    _, _, nodes, probes = S.search_batch(idx, q, with_stats=True)
-    print(f"DILI: avg nodes={float(np.asarray(nodes).mean()):.2f}, "
-          f"avg probes={float(np.asarray(probes).mean()):.2f}  "
-          f"(the paper's cache-miss economy)")
+    if ix.snapshot is not None:
+        _, _, nodes, probes = S.search_batch(ix.snapshot, qd,
+                                             with_stats=True)
+        print(f"DILI: avg nodes={float(np.asarray(nodes).mean()):.2f}, "
+              f"avg probes={float(np.asarray(probes).mean()):.2f}")
 
 
 if __name__ == "__main__":

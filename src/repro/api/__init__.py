@@ -1,0 +1,29 @@
+"""`repro.api` — the typed, engine-agnostic public API (DESIGN.md §10).
+
+One index, many engines: `LearnedIndex` is the single entry point for
+building, querying, and mutating a DILI; `IndexConfig` selects and tunes
+the execution engine (`local` XLA, `pallas` kernel, `sharded` mesh); and
+`DeviceSnapshot` is the typed pytree that replaced the raw snapshot dict.
+`repro.core` remains importable as the low-level layer underneath.
+"""
+
+from .snapshot import DeviceSnapshot
+from .config import ENGINES, IndexConfig, manual_merge_policy
+from .engines import (ENGINE_CLASSES, Engine, LocalEngine, PallasEngine,
+                      ShardedEngine)
+from .index import LearnedIndex
+from ..online.merge import MergePolicy
+
+__all__ = [
+    "DeviceSnapshot",
+    "ENGINES",
+    "ENGINE_CLASSES",
+    "Engine",
+    "IndexConfig",
+    "LearnedIndex",
+    "LocalEngine",
+    "MergePolicy",
+    "PallasEngine",
+    "ShardedEngine",
+    "manual_merge_policy",
+]

@@ -1,0 +1,132 @@
+"""`IndexConfig`: one declarative knob set for every engine.
+
+Engine choice (`local` / `pallas` / `sharded`), key dtype, snapshot
+padding, merge policy, overlay sizing, shard layout, and the Pallas kernel
+budget all live here, so swapping engines is a config edit — not a code
+path — and every facade method reads the same object instead of threading
+six keyword arguments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..online.merge import MergePolicy
+
+ENGINES = ("local", "pallas", "sharded")
+
+
+def manual_merge_policy() -> MergePolicy:
+    """A policy that never auto-merges: writes stay in the overlay until an
+    explicit `flush()` (the overlay still doubles, so `full_fraction` can
+    never reach the disabled triggers)."""
+    return MergePolicy(max_fill=1.1, max_writes=1 << 62,
+                       pressure_check_every=1 << 62)
+
+
+@dataclass(frozen=True)
+class IndexConfig:
+    """Configuration for `repro.api.LearnedIndex`.
+
+    engine            : "local" (XLA fused snapshot+overlay), "pallas"
+                        (VMEM kernel dispatch with XLA fallback, f32 keys),
+                        or "sharded" (mesh + per-shard overlays).
+    dtype             : key/model dtype; None picks the engine default
+                        (f64 for local/sharded, f32 for pallas).
+    pad               : pow2-pad device tables so republishes reuse the
+                        compiled search executable.
+    merge             : `repro.online.MergePolicy` deciding when pending
+                        writes fold through the host tree (Alg. 7/8).
+    overlay_cap       : initial tombstone-overlay capacity (doubles).
+    sample_stride     : bulk-load sampling stride (Alg. 4, Table 13).
+    bulk_kw           : extra `core.dili.bulk_load` kwargs (cost model,
+                        lambda, local_optimized, ...).
+    n_shards          : sharded engine only; None = all visible devices.
+    mesh_axis         : mesh axis name for the sharded engine.
+    lookup_strategy   : sharded lookup collective: "gather" (exact) or
+                        "a2a" (capacity-bounded buckets).
+    interpret         : Pallas interpret mode; None = interpret off-TPU.
+    vmem_budget_bytes : table-size ceiling for the kernel path; bigger
+                        snapshots dispatch to the XLA fallback.
+    early_exit        : batch-convergence early exit (local engine; the
+                        sharded engine always runs the fixed-trip scan —
+                        jax 0.4.x shard_map has no while_loop replication
+                        rule — and the kernel path is fixed-trip by design).
+    max_hits          : default per-query range-window bound.
+
+    `pad` applies to the local/pallas snapshots; the sharded engine's
+    stacked per-shard tables are always pow2-padded (republish without
+    re-trace is structural there).
+    """
+
+    engine: str = "local"
+    dtype: Any = None
+    pad: bool = True
+    merge: MergePolicy = field(default_factory=MergePolicy)
+    overlay_cap: int = 4096
+    sample_stride: int = 1
+    bulk_kw: tuple = ()                      # (("lam", 4.0), ...) — hashable
+    n_shards: int | None = None
+    mesh_axis: str = "data"
+    lookup_strategy: str = "gather"
+    interpret: bool | None = None
+    vmem_budget_bytes: int = 12 * 1024 * 1024
+    early_exit: bool = True
+    max_hits: int = 128
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
+        if self.lookup_strategy not in ("gather", "a2a"):
+            raise ValueError(f"unknown lookup_strategy "
+                             f"{self.lookup_strategy!r}")
+
+    @property
+    def resolved_dtype(self):
+        if self.dtype is not None:
+            return self.dtype
+        return jnp.float32 if self.engine == "pallas" else jnp.float64
+
+    def bulk_load_kw(self) -> dict:
+        return dict(self.bulk_kw, sample_stride=self.sample_stride)
+
+    def with_engine(self, engine: str) -> "IndexConfig":
+        return replace(self, engine=engine)
+
+    # -- (de)serialization for LearnedIndex.save/load ------------------------
+
+    def to_json_dict(self) -> dict:
+        return dict(
+            engine=self.engine,
+            dtype=(None if self.dtype is None
+                   else np.dtype(self.dtype).name),
+            pad=self.pad,
+            merge=dict(max_fill=self.merge.max_fill,
+                       max_writes=self.merge.max_writes,
+                       pressure_lambda=self.merge.pressure_lambda,
+                       pressure_check_every=self.merge.pressure_check_every),
+            overlay_cap=self.overlay_cap,
+            sample_stride=self.sample_stride,
+            bulk_kw=list(list(kv) for kv in self.bulk_kw),
+            n_shards=self.n_shards,
+            mesh_axis=self.mesh_axis,
+            lookup_strategy=self.lookup_strategy,
+            interpret=self.interpret,
+            vmem_budget_bytes=self.vmem_budget_bytes,
+            early_exit=self.early_exit,
+            max_hits=self.max_hits,
+        )
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "IndexConfig":
+        d = dict(d)
+        merge = MergePolicy(**d.pop("merge"))
+        dtype = d.pop("dtype")
+        bulk_kw = tuple(tuple(kv) for kv in d.pop("bulk_kw", []))
+        return cls(merge=merge, bulk_kw=bulk_kw,
+                   dtype=None if dtype is None else np.dtype(dtype), **d)

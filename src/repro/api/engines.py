@@ -1,0 +1,614 @@
+"""The three pluggable engines behind `repro.api.LearnedIndex`.
+
+Every engine speaks the same `Engine` protocol — lookup / range / upsert /
+delete / flush / items / stats — over the same logical contract (exact
+results at every point in time, deletes visible before any merge), but maps
+it to a different execution substrate:
+
+  * `LocalEngine`   — single-process XLA: the fused snapshot+overlay search
+    (`core.search.search_with_overlay`) over an epoch-published
+    `DeviceSnapshot`, writes through `repro.online.OnlineIndex`'s
+    overlay/merge lifecycle.
+  * `PallasEngine`  — f32 keys, VMEM-tiled Pallas kernel dispatch with the
+    XLA fallback (`kernels.ops.dili_search`); the snapshot is built under
+    `placement_dtype(np.float32)` so construction and kernel arithmetic
+    agree (DESIGN.md section 7).
+  * `ShardedEngine` — range-partitioned mesh index (`core.distributed`):
+    per-shard overlays, single-shard merges, fused in-shard overlay
+    resolution, collective lookups/ranges under `shard_map`.
+
+Range queries are overlay-exact on every engine: the device bisects the
+key-sorted pair table with enough headroom to cover pending tombstones,
+then the (small, sorted) overlay window is merged host-side per query.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import search as S
+from ..core.dili import bulk_load, placement_dtype
+from ..core.distributed import (build_sharded, combined_overlay_arrays,
+                                sharded_delete, sharded_lookup,
+                                sharded_merge, sharded_range_query,
+                                sharded_upsert, shard_of, to_mesh)
+from ..core.flat import flatten, merge_sorted_runs
+from ..online.merge import OnlineIndex, adjust_pressure
+from ..online.overlay import (TombstoneOverlay, fold_overlay,
+                              overlay_device_arrays)
+from .config import IndexConfig
+from .snapshot import DeviceSnapshot
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What a `LearnedIndex` backend must provide.  All key/value inputs and
+    outputs are host numpy; engines own their device placement."""
+
+    name: str
+
+    def lookup(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(vals, found) for a batch of point queries."""
+        ...
+
+    def range(self, lo: np.ndarray, hi: np.ndarray,
+              max_hits: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """First `max_hits` live pairs in each [lo, hi), ascending:
+        (keys [Q,H] +inf-padded, vals [Q,H] -1-padded, counts [Q])."""
+        ...
+
+    def upsert(self, keys: np.ndarray, vals: np.ndarray) -> None: ...
+
+    def delete(self, keys: np.ndarray) -> None: ...
+
+    def flush(self) -> None:
+        """Fold every pending write through the host tree and republish."""
+        ...
+
+    def get(self, key: float) -> int | None: ...
+
+    def items(self) -> tuple[np.ndarray, np.ndarray]:
+        """The full live (keys, vals) set, key-sorted, overlay applied."""
+        ...
+
+    def stats(self) -> dict: ...
+
+
+# ---------------------------------------------------------------------------
+# shared overlay-exact helpers
+# ---------------------------------------------------------------------------
+
+
+def _merged_items(snap_k: np.ndarray, snap_v: np.ndarray, ov_k: np.ndarray,
+                  ov_v: np.ndarray, ov_t: np.ndarray):
+    """Apply overlay entries over the key-sorted snapshot pair run and drop
+    tombstones — the logical content of the index, independent of engine."""
+    mk, (mv, mt) = merge_sorted_runs(
+        np.asarray(snap_k, np.float64),
+        (np.asarray(snap_v, np.int64), np.zeros(len(snap_k), np.int8)),
+        np.asarray(ov_k, np.float64),
+        (np.asarray(ov_v, np.int64), np.asarray(ov_t, np.int8)))
+    live = mt == 0
+    return mk[live], mv[live]
+
+
+def _merge_range_windows(ks, vs, cnt, lo, hi, ov_k, ov_v, ov_t,
+                         max_hits: int):
+    """Resolve overlay state over per-query snapshot range windows.
+
+    `ks/vs/cnt` are the device results (ascending prefix per query, counts
+    saturating at the fetched window size, which includes tombstone
+    headroom).  Each query merges its overlay slice [lo, hi) last-write-wins
+    and truncates back to `max_hits`.  O(Q * (window + overlay-slice)) on
+    the host — the overlay is small by construction (it merges away)."""
+    q_n = len(cnt)
+    out_k = np.full((q_n, max_hits), np.inf)
+    out_v = np.full((q_n, max_hits), -1, np.int64)
+    out_c = np.zeros(q_n, np.int32)
+    ks = np.asarray(ks, np.float64)
+    vs = np.asarray(vs, np.int64)
+    starts = np.searchsorted(ov_k, lo, side="left")
+    ends = np.searchsorted(ov_k, hi, side="left")
+    for i in range(q_n):
+        mk, mv = _merged_items(ks[i][: cnt[i]], vs[i][: cnt[i]],
+                               ov_k[starts[i]: ends[i]],
+                               ov_v[starts[i]: ends[i]],
+                               ov_t[starts[i]: ends[i]])
+        c = min(len(mk), max_hits)
+        out_k[i, :c] = mk[:c]
+        out_v[i, :c] = mv[:c]
+        out_c[i] = c
+    return out_k, out_v, out_c
+
+
+@jax.jit
+def _pair_table_recheck(pk, pv, q, v, f):
+    """Comparison-exact patch for point-lookup miss lanes.
+
+    Compiled XLA may evaluate `a + b*q` with a SINGLE rounding (FMA-style
+    contraction survives the optimization_barrier on the f32 path), while
+    construction placed keys with numpy's two roundings; at key magnitudes
+    where f32 ULP-safety is unattainable (DESIGN.md section 7) a boundary
+    query can then mis-route by one child and miss.  Found lanes are always
+    true hits (tag + key equality), so only misses need the O(log n)
+    bisection of the key-sorted pair table."""
+    i = jnp.clip(jnp.searchsorted(pk, q), 0, pk.shape[0] - 1)
+    hit = pk[i] == q
+    return jnp.where(f, v, jnp.where(hit, pv[i], v)), f | hit
+
+
+def _tombstone_headroom(ov_k, ov_t, lo, hi) -> int:
+    """Extra snapshot rows the device window must fetch so that dropping
+    tombstoned keys still leaves `max_hits` live candidates: the maximum
+    number of pending tombstones falling inside any queried window."""
+    tk = ov_k[np.asarray(ov_t) > 0]
+    if len(tk) == 0:
+        return 0
+    return int(np.max(np.searchsorted(tk, hi, side="left")
+                      - np.searchsorted(tk, lo, side="left")))
+
+
+def _truncate_windows(ks, vs, cnt, max_hits: int):
+    """No-overlay fast path: clip device windows fetched with headroom back
+    to `max_hits` without a host merge."""
+    ks = np.asarray(ks, np.float64)[:, :max_hits]
+    vs = np.asarray(vs, np.int64)[:, :max_hits]
+    cnt = np.minimum(np.asarray(cnt, np.int32), max_hits)
+    pos = np.arange(max_hits)[None, :]
+    ks = np.where(pos < cnt[:, None], ks, np.inf)
+    vs = np.where(pos < cnt[:, None], vs, -1)
+    return ks, vs, cnt
+
+
+def _overlay_exact_range(entries, lo, hi, max_hits: int, device_range):
+    """The one overlay-exact range recipe every engine shares: size the
+    device fetch with tombstone headroom, bisect on the device via
+    `device_range(lo, hi, fetch)`, then either truncate (no pending writes)
+    or merge each query's overlay slice host-side."""
+    ov_k, ov_v, ov_t = entries
+    fetch = max_hits + _tombstone_headroom(ov_k, ov_t, lo, hi)
+    ks, vs, cnt = device_range(lo, hi, fetch)
+    ks, vs, cnt = np.asarray(ks), np.asarray(vs), np.asarray(cnt)
+    if len(ov_k) == 0:
+        return _truncate_windows(ks, vs, cnt, max_hits)
+    return _merge_range_windows(ks, vs, cnt, lo, hi, ov_k, ov_v, ov_t,
+                                max_hits)
+
+
+# ---------------------------------------------------------------------------
+# LocalEngine
+# ---------------------------------------------------------------------------
+
+
+class LocalEngine:
+    """Single-process engine over the online-update lifecycle: writes land
+    in the tombstone overlay, reads are ONE fused device dispatch, merges
+    follow the configured `MergePolicy` (DESIGN.md section 8-9)."""
+
+    name = "local"
+
+    def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
+        self.cfg = cfg
+        self.oi = OnlineIndex(keys, vals, policy=cfg.merge,
+                              overlay_cap=cfg.overlay_cap,
+                              dtype=cfg.resolved_dtype, pad=cfg.pad,
+                              early_exit=cfg.early_exit,
+                              **cfg.bulk_load_kw())
+
+    # -- reads --------------------------------------------------------------
+
+    def lookup(self, queries):
+        return self.oi.lookup(queries)
+
+    def range(self, lo, hi, max_hits):
+        dt = self.oi.store.dtype
+        return _overlay_exact_range(
+            self.oi.overlay.entries(), lo, hi, max_hits,
+            lambda lo_, hi_, fetch: S.range_query_batch(
+                self.oi.store.idx, jnp.asarray(lo_, dt),
+                jnp.asarray(hi_, dt), max_hits=fetch))
+
+    def get(self, key: float):
+        return self.oi.get(key)
+
+    @property
+    def snapshot(self):
+        """The current epoch's `DeviceSnapshot` (read-only composition with
+        `core.search`; pending overlay writes are NOT in it)."""
+        return self.oi.store.idx
+
+    # -- writes -------------------------------------------------------------
+
+    def upsert(self, keys, vals):
+        self.oi.upsert_batch(keys, vals)
+
+    def delete(self, keys):
+        self.oi.delete_batch(keys)
+
+    def flush(self):
+        self.oi.flush()
+
+    # -- introspection ------------------------------------------------------
+
+    def items(self):
+        f = self.oi.store.flat
+        ok, ovv, ott = self.oi.overlay.entries()
+        return _merged_items(f.pair_key, f.pair_val, ok, ovv, ott)
+
+    @property
+    def host(self):
+        return self.oi.dili
+
+    @property
+    def epoch(self) -> int:
+        return self.oi.epoch
+
+    @property
+    def n_flattens(self) -> int:
+        return self.oi.n_flattens
+
+    @property
+    def n_merges(self) -> int:
+        return self.oi.n_merges
+
+    def stats(self) -> dict:
+        snap = self.oi.store.idx
+        return dict(engine=self.name, epoch=self.oi.epoch,
+                    max_depth=snap.max_depth,
+                    snapshot_keys=int(self.oi.store.flat.n_pairs),
+                    pending_writes=self.oi.overlay.count,
+                    n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    merge_reasons=dict(self.oi.merge_reasons),
+                    device_bytes=snap.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# PallasEngine
+# ---------------------------------------------------------------------------
+
+
+class PallasEngine:
+    """f32 kernel engine: lookups dispatch to the Pallas kernel when the
+    tables fit the configured VMEM budget (XLA fallback otherwise / for
+    flagged lanes), ranges bisect an f32 `DeviceSnapshot`.  Keys are
+    quantized to f32 at the boundary — duplicates after the cast collapse
+    last-write-wins, the documented f32 tolerance rule."""
+
+    name = "pallas"
+
+    def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
+        from ..kernels import ops as K
+        self._K = K
+        self.cfg = cfg
+        k32, v64 = self._quantize(keys, vals)
+        with placement_dtype(np.float32):
+            self.dili = bulk_load(k32, v64, **cfg.bulk_load_kw())
+        self.overlay = TombstoneOverlay.empty(cfg.overlay_cap)
+        self._ov_mirror = None          # device overlay, rebuilt on write
+        self.epoch = 0
+        self.n_flattens = 0
+        self.n_merges = 0
+        self._writes_since_publish = 0
+        self._writes_since_pressure = 0
+        self._publish()
+
+    @staticmethod
+    def _check_vals_i32(vals: np.ndarray) -> np.ndarray:
+        """The kernel path stores payloads as int32 (deliberately — DESIGN.md
+        section 2); reject out-of-range vals instead of silently wrapping."""
+        vals = np.asarray(vals, np.int64)
+        if len(vals) and (vals.max() >= 2**31 or vals.min() < -(2**31)):
+            raise ValueError(
+                "pallas engine payloads must fit int32 (the kernel's "
+                "payload width); use the local or sharded engine for "
+                ">=2^31 vals")
+        return vals
+
+    @classmethod
+    def _quantize(cls, keys, vals) -> tuple[np.ndarray, np.ndarray]:
+        """Cast keys to f32; collapse post-cast duplicates last-write-wins."""
+        k32 = np.asarray(keys, np.float64).astype(np.float32)
+        order = np.argsort(k32, kind="stable")
+        k32, vals = k32[order], cls._check_vals_i32(vals)[order]
+        keep = np.ones(len(k32), bool)
+        keep[:-1] = k32[:-1] != k32[1:]          # keep the LAST duplicate
+        return k32[keep].astype(np.float64), vals[keep]
+
+    @property
+    def _interpret(self) -> bool:
+        if self.cfg.interpret is not None:
+            return self.cfg.interpret
+        return jax.default_backend() != "tpu"
+
+    def _publish(self):
+        self.flat = flatten(self.dili)
+        self.arrs = self._K.kernel_arrays(self.flat)
+        self.snap = DeviceSnapshot.from_flat(self.flat, dtype=jnp.float32,
+                                             pad=self.cfg.pad)
+        self.n_flattens += 1
+        self.epoch += 1
+
+    # -- reads --------------------------------------------------------------
+
+    def lookup(self, queries):
+        q32 = jnp.asarray(np.asarray(queries, np.float64), jnp.float32)
+        v, f = self._K.dili_search(self.arrs, q32, interpret=self._interpret,
+                                   vmem_budget=self.cfg.vmem_budget_bytes)
+        v, f = _pair_table_recheck(self.snap.arrays["pair_key"],
+                                   self.snap.arrays["pair_val"], q32, v, f)
+        if self.overlay.count:
+            if self._ov_mirror is None:
+                self._ov_mirror = overlay_device_arrays(self.overlay,
+                                                        jnp.float32)
+            v, f = S.resolve_overlay(self._ov_mirror, q32, v, f)
+        return np.asarray(v, np.int64), np.asarray(f, bool)
+
+    def range(self, lo, hi, max_hits):
+        lo32 = np.asarray(lo, np.float64).astype(np.float32)
+        hi32 = np.asarray(hi, np.float64).astype(np.float32)
+        return _overlay_exact_range(
+            self.overlay.entries(), lo32, hi32, max_hits,
+            lambda lo_, hi_, fetch: S.range_query_batch(
+                self.snap, jnp.asarray(lo_, jnp.float32),
+                jnp.asarray(hi_, jnp.float32), max_hits=fetch))
+
+    def get(self, key: float):
+        k = float(np.float32(key))
+        state, v = self.overlay.get(k)
+        if state == 0:                      # LIVE
+            return v
+        if state == 1:                      # TOMBSTONE
+            return None
+        # the host walk must predict in the precision the tree was placed in
+        with placement_dtype(np.float32):
+            return self.dili.search(k)
+
+    # -- writes -------------------------------------------------------------
+
+    def _quantize_keys(self, keys) -> np.ndarray:
+        return (np.atleast_1d(np.asarray(keys, np.float64))
+                .astype(np.float32).astype(np.float64))
+
+    def upsert(self, keys, vals):
+        # overlay reads resolve in int64, but a merge folds these into the
+        # int32 kernel tables — enforce the width before accepting the write
+        vals = self._check_vals_i32(np.atleast_1d(np.asarray(vals)))
+        self.overlay = self.overlay.upsert_batch(self._quantize_keys(keys),
+                                                 vals)
+        self._ov_mirror = None
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def delete(self, keys):
+        self.overlay = self.overlay.delete_batch(self._quantize_keys(keys))
+        self._ov_mirror = None
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def _note_writes(self, n: int):
+        self._writes_since_publish += n
+        self._writes_since_pressure += n
+        p = self.cfg.merge
+        trigger = (self.overlay.full_fraction >= p.max_fill
+                   or self._writes_since_publish >= p.max_writes)
+        if not trigger and self._writes_since_pressure >= p.pressure_check_every:
+            self._writes_since_pressure = 0
+            with placement_dtype(np.float32):   # leaf walk predicts in f32
+                trigger = (adjust_pressure(self.dili, self.overlay)
+                           > p.pressure_lambda)
+        if trigger:
+            self.flush()
+
+    def flush(self):
+        if self.overlay.count == 0:
+            return
+        with placement_dtype(np.float32):
+            fold_overlay(self.dili, self.overlay)
+        self.overlay = TombstoneOverlay.empty(self.cfg.overlay_cap)
+        self._ov_mirror = None
+        self.n_merges += 1
+        self._writes_since_publish = 0
+        self._writes_since_pressure = 0
+        self._publish()
+
+    # -- introspection ------------------------------------------------------
+
+    def items(self):
+        ok, ovv, ott = self.overlay.entries()
+        return _merged_items(self.flat.pair_key, self.flat.pair_val,
+                             ok, ovv, ott)
+
+    @property
+    def host(self):
+        return self.dili
+
+    @property
+    def snapshot(self):
+        return self.snap
+
+    def stats(self) -> dict:
+        return dict(engine=self.name, epoch=self.epoch,
+                    max_depth=self.flat.max_depth,
+                    snapshot_keys=int(self.flat.n_pairs),
+                    pending_writes=self.overlay.count,
+                    n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    table_bytes=self._K.table_bytes(self.arrs),
+                    kernel_eligible=(self._K.table_bytes(self.arrs)
+                                     <= self.cfg.vmem_budget_bytes),
+                    device_bytes=self.snap.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# ShardedEngine
+# ---------------------------------------------------------------------------
+
+
+class ShardedEngine:
+    """Mesh engine: quantile range partitioning, per-shard tombstone
+    overlays, collective lookups (gather or a2a) with in-shard overlay
+    resolution, and single-shard merges + republish.  Query batches are
+    padded to a shard multiple with +inf (guaranteed misses) and unpadded
+    on the way out, so callers never see the mesh shape."""
+
+    name = "sharded"
+
+    def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
+        self.cfg = cfg
+        n = cfg.n_shards or len(jax.devices())
+        # every shard's bulk_load needs >= 2 keys, and the mesh cannot span
+        # more devices than exist; a tiny index (e.g. a freshly warmed
+        # session table) clamps to fewer shards rather than crashing — it
+        # grows back onto more shards at the next build
+        n = max(1, min(n, len(keys) // 2, len(jax.devices())))
+        self.sd = build_sharded(keys, vals, n_shards=n,
+                                overlay_cap=cfg.overlay_cap, keep_host=True,
+                                **cfg.bulk_load_kw())
+        self.mesh = jax.make_mesh((n,), (cfg.mesh_axis,))
+        self.n_flattens = n                      # build flattened every shard
+        self.n_merges = 0
+        self.n_publishes = 1
+        self._writes_since_publish = 0
+        self._writes_since_pressure = 0
+        self.arrs = to_mesh(self.sd, self.mesh, axis=cfg.mesh_axis,
+                            dtype=cfg.resolved_dtype)
+
+    def _pad(self, x) -> tuple[np.ndarray, int]:
+        x = np.atleast_1d(np.asarray(x, np.float64))
+        pad = (-len(x)) % self.sd.n_shards
+        if pad:
+            x = np.concatenate([x, np.full(pad, np.inf)])
+        return x, len(x) - pad
+
+    # -- reads --------------------------------------------------------------
+
+    def lookup(self, queries):
+        q, n = self._pad(queries)
+        qd = jnp.asarray(q, self.cfg.resolved_dtype)
+        ova = combined_overlay_arrays(self.sd, self.cfg.resolved_dtype)
+        out = sharded_lookup(self.mesh, self.arrs, qd, self.sd.max_depth,
+                             axis=self.cfg.mesh_axis,
+                             strategy=self.cfg.lookup_strategy, overlay=ova,
+                             has_dense=self.sd.has_dense)
+        if (self.cfg.lookup_strategy == "a2a"
+                and int(np.asarray(out[2]).sum()) > 0):
+            # a2a buckets are capacity-bounded; overflowed lanes come back
+            # found=False.  The facade's contract is exact results, so a
+            # skewed batch that overflows re-resolves on the (always-exact)
+            # gather path instead of silently reporting misses.
+            out = sharded_lookup(self.mesh, self.arrs, qd,
+                                 self.sd.max_depth, axis=self.cfg.mesh_axis,
+                                 strategy="gather", overlay=ova,
+                                 has_dense=self.sd.has_dense)
+        v, f = out[0], out[1]
+        return (np.asarray(v, np.int64)[:n], np.asarray(f, bool)[:n])
+
+    def range(self, lo, hi, max_hits):
+        lo_p, n = self._pad(lo)
+        hi_p, _ = self._pad(hi)
+        dt = self.cfg.resolved_dtype
+
+        def device_range(_lo, _hi, fetch):
+            # the collective needs the shard-multiple padded batch; results
+            # are sliced back to the caller's n queries
+            ks, vs, cnt = sharded_range_query(
+                self.mesh, self.arrs, jnp.asarray(lo_p, dt),
+                jnp.asarray(hi_p, dt), max_hits=fetch,
+                axis=self.cfg.mesh_axis)
+            return (np.asarray(ks)[:n], np.asarray(vs)[:n],
+                    np.asarray(cnt)[:n])
+
+        return _overlay_exact_range(self._overlay_entries(), lo_p[:n],
+                                    hi_p[:n], max_hits, device_range)
+
+    def _overlay_entries(self):
+        """Combined overlay entries, globally sorted (disjoint shard
+        ranges => shard-order concatenation IS key order)."""
+        parts = [ov.entries() for ov in self.sd.overlays]
+        return (np.concatenate([p[0] for p in parts]),
+                np.concatenate([p[1] for p in parts]),
+                np.concatenate([p[2] for p in parts]))
+
+    def get(self, key: float):
+        k = float(key)
+        r = int(shard_of(self.sd, np.array([k]))[0])
+        state, v = self.sd.overlays[r].get(k)
+        if state == 0:
+            return v
+        if state == 1:
+            return None
+        return self.sd.dilis[r].search(k)
+
+    # -- writes -------------------------------------------------------------
+
+    def upsert(self, keys, vals):
+        sharded_upsert(self.sd, keys, vals)
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def delete(self, keys):
+        sharded_delete(self.sd, keys)
+        self._note_writes(len(np.atleast_1d(keys)))
+
+    def _note_writes(self, n: int):
+        p = self.cfg.merge
+        self._writes_since_publish += n
+        self._writes_since_pressure += n
+        trigger = (self._writes_since_publish >= p.max_writes
+                   or any(ov.full_fraction >= p.max_fill
+                          for ov in self.sd.overlays))
+        if not trigger and self._writes_since_pressure >= p.pressure_check_every:
+            self._writes_since_pressure = 0
+            trigger = any(
+                ov.count and (adjust_pressure(d, ov) > p.pressure_lambda)
+                for d, ov in zip(self.sd.dilis, self.sd.overlays))
+        if trigger:
+            self.flush()
+
+    def flush(self):
+        """Fold every shard with pending writes and republish the mesh
+        copy.  (A policy trigger folds all pending shards too — the merge
+        itself is still per-shard row rewrites, no global rebuild.)"""
+        merged = sharded_merge(self.sd, max_fill=0.0)
+        if merged:
+            self.n_merges += 1
+            self.n_flattens += len(merged)
+            self._writes_since_publish = 0
+            self._writes_since_pressure = 0
+            self.arrs = to_mesh(self.sd, self.mesh, axis=self.cfg.mesh_axis,
+                                dtype=self.cfg.resolved_dtype)
+            self.n_publishes += 1
+
+    # -- introspection ------------------------------------------------------
+
+    def items(self):
+        snap_k = np.concatenate([f.pair_key for f in self.sd.flats])
+        snap_v = np.concatenate([f.pair_val for f in self.sd.flats])
+        ok, ovv, ott = self._overlay_entries()
+        return _merged_items(snap_k, snap_v, ok, ovv, ott)
+
+    @property
+    def host(self):
+        return self.sd.dilis
+
+    @property
+    def epoch(self) -> int:
+        return self.sd.epoch
+
+    def stats(self) -> dict:
+        return dict(engine=self.name, epoch=self.sd.epoch,
+                    max_depth=self.sd.max_depth,
+                    n_shards=self.sd.n_shards,
+                    snapshot_keys=sum(int(f.n_pairs) for f in self.sd.flats),
+                    pending_writes=sum(ov.count for ov in self.sd.overlays),
+                    n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    n_publishes=self.n_publishes,
+                    device_bytes=sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                                     for v in self.arrs.values()))
+
+
+ENGINE_CLASSES = {
+    "local": LocalEngine,
+    "pallas": PallasEngine,
+    "sharded": ShardedEngine,
+}

@@ -1,0 +1,196 @@
+"""`LearnedIndex`: one index object, many engines.
+
+The paper presents DILI as a single index with one contract — build,
+search, range, insert, delete (Alg. 1/4/6/7/8).  This facade restores that
+contract over the repo's three execution substrates: pick an engine in
+`IndexConfig`, and every workload (serving session tables, record stores,
+benchmarks, examples) composes with it unchanged.
+
+    from repro.api import IndexConfig, LearnedIndex
+
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(engine="local"))
+    vals, found = ix.lookup(queries)
+    ks, vs, cnt = ix.range(lo, hi, max_hits=64)
+    ix.upsert(new_keys, new_vals)      # visible immediately (overlay)
+    ix.delete(dead_keys)               # visible immediately (tombstones)
+    ix.flush()                         # fold + republish (Alg. 7/8)
+    ix.save("index.npz"); ix2 = LearnedIndex.load("index.npz")
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from .config import IndexConfig
+from .engines import ENGINE_CLASSES, Engine
+
+
+class LearnedIndex:
+    """Engine-agnostic DILI facade.  All inputs/outputs are host numpy;
+    device placement, sharding, kernel dispatch, overlay/merge scheduling,
+    and depth threading are the engine's business."""
+
+    def __init__(self, engine: Engine, config: IndexConfig):
+        self._engine = engine
+        self.config = config
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, keys, vals=None, config: IndexConfig | None = None,
+              **overrides) -> "LearnedIndex":
+        """Bulk-load (Alg. 4) through the configured engine.  `overrides`
+        are `IndexConfig` field replacements, e.g. `engine="pallas"`."""
+        cfg = config or IndexConfig()
+        if overrides:
+            cfg = replace(cfg, **overrides)
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if vals is None:
+            vals = np.arange(len(keys), dtype=np.int64)
+        vals = np.atleast_1d(np.asarray(vals, np.int64))
+        if len(keys) != len(vals):
+            raise ValueError(f"{len(keys)} keys vs {len(vals)} vals")
+        if len(keys) == 0:
+            raise ValueError("cannot build an empty index")
+        if not np.isfinite(keys).all():
+            raise ValueError("keys must be finite")
+        # the engines' bulk loaders require sorted unique keys; normalize at
+        # the public boundary (duplicates collapse last-write-wins, matching
+        # upsert semantics) so every engine sees the same contract
+        order = np.argsort(keys, kind="stable")
+        keys, vals = keys[order], vals[order]
+        keep = np.ones(len(keys), bool)
+        keep[:-1] = keys[:-1] != keys[1:]
+        keys, vals = keys[keep], vals[keep]
+        return cls(ENGINE_CLASSES[cfg.engine](keys, vals, cfg), cfg)
+
+    # -- reads ---------------------------------------------------------------
+
+    def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
+        """Batched point lookups -> (vals int64, found bool); vals only
+        valid where found."""
+        q = np.atleast_1d(np.asarray(queries, np.float64))
+        if not np.isfinite(q).all():
+            # engines use +/-inf internally as padding/boundary sentinels;
+            # a non-finite query would match them (engine-dependently)
+            raise ValueError("queries must be finite")
+        v, f = self._engine.lookup(q)
+        return np.asarray(v, np.int64), np.asarray(f, bool)
+
+    def range(self, lo, hi,
+              max_hits: int | None = None
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """For each [lo, hi): the first `max_hits` live pairs ascending —
+        (keys [Q,H] +inf-padded, vals [Q,H] -1-padded, counts [Q]
+        saturating at `max_hits`).  Overlay-exact: pending upserts appear,
+        pending deletes are hidden."""
+        lo = np.atleast_1d(np.asarray(lo, np.float64))
+        hi = np.atleast_1d(np.asarray(hi, np.float64))
+        if lo.shape != hi.shape:
+            raise ValueError(f"lo {lo.shape} vs hi {hi.shape}")
+        if not (np.isfinite(lo).all() and np.isfinite(hi).all()):
+            raise ValueError("range bounds must be finite")
+        if max_hits is None:
+            max_hits = self.config.max_hits
+        if max_hits < 1:
+            raise ValueError(f"max_hits must be >= 1, got {max_hits}")
+        return self._engine.range(lo, hi, max_hits)
+
+    def get(self, key: float) -> int | None:
+        """Host-side exact point read (overlay state wins)."""
+        return self._engine.get(float(key))
+
+    # -- writes --------------------------------------------------------------
+
+    def upsert(self, keys, vals) -> None:
+        """Insert-or-update (Alg. 7 at merge time); visible immediately."""
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        vals = np.atleast_1d(np.asarray(vals, np.int64))
+        if len(keys) != len(vals):
+            raise ValueError(f"{len(keys)} keys vs {len(vals)} vals")
+        if not np.isfinite(keys).all():
+            raise ValueError("keys must be finite")
+        self._engine.upsert(keys, vals)
+
+    def delete(self, keys) -> None:
+        """Delete (Alg. 8 at merge time); visible immediately."""
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if not np.isfinite(keys).all():
+            raise ValueError("keys must be finite")
+        self._engine.delete(keys)
+
+    def flush(self) -> dict:
+        """Fold every pending write through the host tree and republish;
+        returns `stats()` afterwards."""
+        self._engine.flush()
+        return self.stats()
+
+    # -- introspection -------------------------------------------------------
+
+    def items(self) -> tuple[np.ndarray, np.ndarray]:
+        """The full live (keys, vals) content, key-sorted (O(n))."""
+        return self._engine.items()
+
+    def stats(self) -> dict:
+        return self._engine.stats()
+
+    @property
+    def engine(self) -> str:
+        return self._engine.name
+
+    @property
+    def epoch(self) -> int:
+        return self._engine.epoch
+
+    @property
+    def n_flattens(self) -> int:
+        return self._engine.n_flattens
+
+    @property
+    def n_merges(self) -> int:
+        return self._engine.n_merges
+
+    @property
+    def host(self):
+        """The mutable host writer (engine-specific; introspection only)."""
+        return self._engine.host
+
+    @property
+    def snapshot(self):
+        """The engine's current `DeviceSnapshot` for low-level `core.search`
+        composition (e.g. `with_stats` probe counting), or None when the
+        engine has no single-device snapshot (sharded)."""
+        return getattr(self._engine, "snapshot", None)
+
+    # -- persistence ---------------------------------------------------------
+
+    @staticmethod
+    def _npz_path(path: str) -> str:
+        # np.savez appends .npz to bare paths; normalize on both sides so
+        # save(p) -> load(p) always round-trips
+        return path if path.endswith(".npz") else path + ".npz"
+
+    def save(self, path: str) -> None:
+        """Persist the logical content (live keys/vals incl. pending
+        writes) + config.  Load rebuilds the tree — snapshots are derived
+        state, and a rebuild re-optimizes the layout for the merged
+        distribution.  `config.bulk_kw` must be JSON-serializable."""
+        keys, vals = self.items()
+        np.savez(self._npz_path(path), keys=keys, vals=vals,
+                 config=np.frombuffer(
+                     json.dumps(self.config.to_json_dict()).encode(),
+                     dtype=np.uint8))
+
+    @classmethod
+    def load(cls, path: str,
+             config: IndexConfig | None = None) -> "LearnedIndex":
+        """Rebuild from `save()` output; `config` overrides the saved one
+        (e.g. load a locally-built index onto the sharded engine)."""
+        with np.load(cls._npz_path(path)) as z:
+            keys, vals = z["keys"], z["vals"]
+            saved = json.loads(bytes(z["config"].tobytes()).decode())
+        return cls.build(keys, vals,
+                         config=config or IndexConfig.from_json_dict(saved))

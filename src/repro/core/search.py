@@ -116,7 +116,16 @@ def device_arrays(flat: FlatDILI, dtype=jnp.float64, pad: bool = True) -> dict:
     return out
 
 
-def resolve_max_depth(idx: dict) -> int:
+def as_snapshot_dict(idx) -> dict:
+    """Accept either the raw snapshot dict or an `api.DeviceSnapshot`
+    (duck-typed on `.as_dict()`, so `core` never imports `api`).  Every
+    public search entry point funnels through here."""
+    if isinstance(idx, dict):
+        return idx
+    return idx.as_dict()
+
+
+def resolve_max_depth(idx) -> int:
     """The snapshot's true traversal depth, as a static int.
 
     Every search call site derives its trip count from the snapshot through
@@ -125,7 +134,7 @@ def resolve_max_depth(idx: dict) -> int:
     are a bug.  Raises inside traced code, where the depth must be threaded
     in explicitly as a Python int.
     """
-    md = idx["max_depth"]
+    md = as_snapshot_dict(idx)["max_depth"]
     if isinstance(md, jax.core.Tracer):
         raise TypeError(
             "resolve_max_depth() needs a concrete snapshot; inside jit/"
@@ -261,13 +270,16 @@ def search_batch(idx: dict, queries: jnp.ndarray, max_depth: int | None = None,
                  with_stats: bool = False, early_exit: bool = False):
     """Point lookups. Returns (values, found) — values only valid where found.
 
-    `max_depth=None` derives the trip count from the snapshot
-    (`resolve_max_depth`); pass it explicitly only inside traced code.
-    `early_exit=True` swaps the fixed-trip scan for a batch-convergence
-    while_loop.  `with_stats` additionally returns (nodes_visited,
-    slot_probes) per query — the Table-5 cache-miss proxy (each node visit +
-    slot probe = one HBM/cache-line touch in the paper's cost model).
+    `idx` is the device snapshot — either the raw dict or an
+    `api.DeviceSnapshot`.  `max_depth=None` derives the trip count from the
+    snapshot (`resolve_max_depth`); pass it explicitly only inside traced
+    code.  `early_exit=True` swaps the fixed-trip scan for a
+    batch-convergence while_loop.  `with_stats` additionally returns
+    (nodes_visited, slot_probes) per query — the Table-5 cache-miss proxy
+    (each node visit + slot probe = one HBM/cache-line touch in the paper's
+    cost model).
     """
+    idx = as_snapshot_dict(idx)
     if max_depth is None:
         max_depth = resolve_max_depth(idx)
     idx, has_dense = _split_static(idx)
@@ -396,6 +408,7 @@ def search_with_overlay(idx: dict, ov: dict, queries: jnp.ndarray,
     costs one device dispatch, not a traversal dispatch plus an overlay
     round-trip.
     """
+    idx = as_snapshot_dict(idx)
     if max_depth is None:
         max_depth = resolve_max_depth(idx)
     idx, has_dense = _split_static(idx)
@@ -435,6 +448,8 @@ def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
     not densely packed — Fig. 6b discussion.  The pair table densifies them
     once per publish instead.)
     """
+    idx = as_snapshot_dict(idx)
+    idx = {k: idx[k] for k in ("pair_key", "pair_val")}
     return _range_query(idx, lo, hi, max_hits=max_hits)
 
 

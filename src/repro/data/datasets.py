@@ -11,11 +11,15 @@ these generators reproduce their distributional shapes at any scale:
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 
 def generate(name: str, n: int, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # crc32, not hash(): str hashing is salted per process, which silently
+    # made "deterministic" datasets differ between runs/CI jobs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
     over = int(n * 1.25) + 16
     if name == "logn":
         raw = rng.lognormal(0.0, 1.0, over)

@@ -1,26 +1,24 @@
 """DILI-indexed record store: the training data pipeline's random-access path.
 
 Variable-length records (token sequences) are stored in one flat token arena.
-The DILI maps document key -> doc ordinal (int32-safe for the TPU kernel
-path); a sidecar table maps ordinal -> (offset, length).  Batched `lookup`
-runs the device-side batched search (core/search.py) — the paper's technique
-IS the pipeline's index.  New documents go through DILI's Algorithm-7 insert
-+ snapshot republish.
+A `repro.api.LearnedIndex` maps document key -> doc ordinal; a sidecar table
+maps ordinal -> (offset, length).  Batched `lookup` runs the engine's
+batched device search — the paper's technique IS the pipeline's index — and
+new documents are overlay upserts (visible immediately) that fold through
+DILI's Algorithm-7 insert on `publish()`/merge.
 """
 
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
-from ..core import search as S
-from ..core.dili import DILI, bulk_load
-from ..core.flat import flatten
+from ..api import IndexConfig, LearnedIndex, manual_merge_policy
 
 
 class RecordStore:
     def __init__(self, doc_keys: np.ndarray, docs: list[np.ndarray],
-                 sample_stride: int = 4):
+                 sample_stride: int = 4,
+                 config: IndexConfig | None = None):
         order = np.argsort(doc_keys)
         doc_keys = np.asarray(doc_keys, np.float64)[order]
         docs = [np.asarray(docs[i], np.int32) for i in order]
@@ -30,13 +28,16 @@ class RecordStore:
         self.offsets = np.concatenate([[0], np.cumsum(lens)[:-1]])
         self.lengths = lens
         ordinals = np.arange(len(docs), dtype=np.int64)
-        self.dili: DILI = bulk_load(doc_keys, ordinals,
-                                    sample_stride=sample_stride)
-        self._republish()
+        # ingest-controlled pipeline: merges happen at publish(), not on a
+        # write-pressure trigger mid-epoch
+        cfg = config or IndexConfig(sample_stride=sample_stride,
+                                    merge=manual_merge_policy())
+        self.index = LearnedIndex.build(doc_keys, ordinals, config=cfg)
 
-    def _republish(self):
-        self.flat = flatten(self.dili)
-        self.idx = S.device_arrays(self.flat)
+    @property
+    def dili(self):
+        """The host writer (introspection)."""
+        return self.index.host
 
     # -- write path ---------------------------------------------------------
 
@@ -45,20 +46,17 @@ class RecordStore:
         self.lengths = np.append(self.lengths, len(tokens))
         self.arena = np.concatenate([self.arena,
                                      np.asarray(tokens, np.int32)])
-        self.dili.insert(float(key), len(self.offsets) - 1)
+        self.index.upsert(float(key), len(self.offsets) - 1)
 
     def publish(self) -> None:
-        """Make writes visible to the device reader (snapshot swap)."""
-        self._republish()
+        """Fold pending adds through the host tree (snapshot republish)."""
+        self.index.flush()
 
     # -- read path ----------------------------------------------------------
 
     def lookup(self, keys) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched: returns (offsets, lengths, found)."""
-        v, f = S.search_batch(self.idx, jnp.asarray(keys, jnp.float64),
-                              max_depth=self.flat.max_depth, early_exit=True)
-        v = np.asarray(v).astype(np.int64)
-        f = np.asarray(f)
+        v, f = self.index.lookup(keys)
         ords = np.where(f, v, 0)
         return self.offsets[ords], self.lengths[ords], f
 

@@ -57,14 +57,21 @@ def table_bytes(arrs: dict) -> int:
                for k, v in arrs.items() if hasattr(v, "dtype"))
 
 
-def dili_search(arrs: dict, queries: jnp.ndarray, interpret: bool = True):
-    """Batched lookup via the Pallas kernel with XLA fallback lanes."""
+def dili_search(arrs: dict, queries: jnp.ndarray, interpret: bool = True,
+                vmem_budget: int | None = None):
+    """Batched lookup via the Pallas kernel with XLA fallback lanes.
+
+    `vmem_budget` overrides the module-level `VMEM_BUDGET_BYTES` dispatch
+    ceiling (the `IndexConfig.vmem_budget_bytes` knob of the api facade);
+    tables above it take the pure-XLA path outright.
+    """
     max_depth = int(arrs["max_depth"])
     nq = queries.shape[0]
     pad = (-nq) % BLOCK_Q
     qp = jnp.pad(queries, (0, pad), constant_values=jnp.inf)
 
-    if table_bytes(arrs) <= VMEM_BUDGET_BYTES:
+    budget = VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    if table_bytes(arrs) <= budget:
         out, found, fb = dili_search_pallas(
             arrs["a"], arrs["b"], arrs["base"], arrs["fo"], arrs["dense"],
             arrs["tag"], arrs["key"], arrs["val"], arrs["root"], qp,

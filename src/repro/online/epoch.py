@@ -3,12 +3,13 @@
 `SnapshotStore` owns the immutable device snapshots the read path serves
 from.  Publishing is double-buffered: epoch N+1's arrays are built and
 uploaded into the *back* buffer while epoch N keeps serving from the front
-buffer, then a single reference flip makes N+1 current.  Because snapshots
-are immutable jax arrays, a reader that captured epoch N's dict mid-batch
-keeps a consistent view even after the flip — the flip only retargets new
-readers.
+buffer, then a single reference flip makes N+1 current.  Snapshots are
+typed `api.DeviceSnapshot` pytrees (immutable jax arrays + static
+`max_depth`/`has_dense`), so a reader that captured epoch N's snapshot
+mid-batch keeps a consistent view even after the flip — the flip only
+retargets new readers — and never threads `max_depth` by hand.
 
-Shapes are padded to powers of two (`core.search.device_arrays(pad=True)`),
+Shapes are padded to powers of two (`DeviceSnapshot.from_flat(pad=True)`),
 so a republish re-traces the compiled search executable only when a table
 crosses a pow2 boundary; `EpochStats.retraced` records when that happened.
 Per-epoch stats also record overlay fill and merge lag at publish time and
@@ -23,7 +24,6 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from ..core import search as S
 from ..core.flat import FlatDILI
 
 
@@ -56,8 +56,9 @@ class SnapshotStore:
         return self._buf[self._active][0]
 
     @property
-    def idx(self) -> dict:
-        """The current epoch's device arrays (immutable; safe to capture)."""
+    def idx(self):
+        """The current epoch's `api.DeviceSnapshot` (immutable; safe to
+        capture mid-batch — a flip only retargets new readers)."""
         return self._buf[self._active][1]
 
     @property
@@ -73,18 +74,17 @@ class SnapshotStore:
     def publish(self, flat: FlatDILI, *, overlay_fill: float = 0.0,
                 merge_lag: int = 0) -> EpochStats:
         """Upload `flat` into the back buffer, flip, bump the epoch."""
+        from ..api.snapshot import DeviceSnapshot   # lazy: api imports online
+
         t0 = time.perf_counter()
-        idx = S.device_arrays(flat, self.dtype, pad=self.pad)
-        jax.block_until_ready(idx)
+        snap = DeviceSnapshot.from_flat(flat, self.dtype, pad=self.pad)
+        jax.block_until_ready(snap.arrays)
         publish_s = time.perf_counter() - t0
 
         back = 1 - self._active if self._active >= 0 else 0
-        retraced = True
-        if self._active >= 0:
-            prev = self._buf[self._active][1]
-            retraced = any(prev[k].shape != idx[k].shape
-                           for k in ("a", "tag"))
-        self._buf[back] = (flat, idx)
+        prev = self._buf[self._active][1] if self._active >= 0 else None
+        retraced = not snap.same_shapes(prev)
+        self._buf[back] = (flat, snap)
         self._active = back            # the flip: new readers see epoch N+1
         self.epoch += 1
 
@@ -92,8 +92,7 @@ class SnapshotStore:
         st = EpochStats(
             epoch=self.epoch, n_keys=n_pairs,
             n_nodes=flat.n_nodes, n_slots=flat.n_slots,
-            bytes_uploaded=sum(int(v.nbytes) for v in idx.values()
-                               if hasattr(v, "nbytes")),
+            bytes_uploaded=snap.nbytes,
             overlay_fill=overlay_fill, merge_lag=merge_lag,
             publish_s=publish_s, retraced=retraced)
         self.history.append(st)

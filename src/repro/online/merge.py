@@ -69,12 +69,14 @@ class OnlineIndex:
 
     def __init__(self, keys=None, vals=None, *, dili: DILI | None = None,
                  policy: MergePolicy | None = None, overlay_cap: int = 4096,
-                 dtype=jnp.float64, **bulk_kw):
+                 dtype=jnp.float64, pad: bool = True, early_exit: bool = True,
+                 **bulk_kw):
         if dili is None:
             dili = bulk_load(np.asarray(keys, np.float64), vals, **bulk_kw)
         self.dili = dili
         self.policy = policy or MergePolicy()
-        self.store = SnapshotStore(dtype=dtype)
+        self.early_exit = early_exit
+        self.store = SnapshotStore(dtype=dtype, pad=pad)
         self.overlay = TombstoneOverlay.empty(overlay_cap)
         self._overlay_cap0 = self.overlay.cap
         self._ov_arrays: dict | None = None     # device mirror cache
@@ -189,12 +191,13 @@ class OnlineIndex:
 
     def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
         """Batched fused snapshot+overlay lookup -> (vals, found): one jitted
-        dispatch, depth-exact, query buffer donated (it is freshly uploaded
+        dispatch, depth-exact (trip count from the `DeviceSnapshot`, no
+        manual threading), query buffer donated (it is freshly uploaded
         here, so the read path never copies it back)."""
         from ..core import search as S
         q = jnp.asarray(queries, self.store.dtype)
         v, f = S.search_with_overlay(self.store.idx, self._overlay_arrays(),
-                                     q, max_depth=self.store.max_depth,
+                                     q, early_exit=self.early_exit,
                                      donate_queries=q is not queries)
         return np.asarray(v), np.asarray(f)
 

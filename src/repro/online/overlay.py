@@ -14,7 +14,7 @@ exist in the snapshot.  Semantics:
     padded device mirror only changes shape (and re-traces the fused lookup)
     on a doubling, never on a plain write;
   * reads resolve overlay-hit / overlay-tombstone / snapshot-hit in one
-    fused jitted pass (`search_with_updates`), reusing
+    fused jitted pass (`core.search.search_with_overlay`), reusing
     `core.search.search_batch` for the snapshot side.
 
 The structure is persistent (every write returns a new overlay) so a reader
@@ -141,9 +141,13 @@ def overlay_device_arrays(ov: TombstoneOverlay, dtype=jnp.float64) -> dict:
 
 def search_with_updates(idx: dict, ov: dict, queries: jnp.ndarray,
                         max_depth: int | None = None):
-    """One fused pass: snapshot traversal (search_batch) + overlay
-    searchsorted, resolving overlay-hit / overlay-tombstone / snapshot-hit.
-
-    Thin alias of `core.search.search_with_overlay` (the single fused jitted
-    dispatch); the depth defaults to the snapshot's own `max_depth`."""
+    """DEPRECATED alias of `core.search.search_with_overlay` (kept from the
+    PR-2 rename).  Use `search_with_overlay` directly, or go through the
+    `repro.api.LearnedIndex` facade, which fuses the overlay automatically.
+    """
+    import warnings
+    warnings.warn(
+        "repro.online.search_with_updates is deprecated; call "
+        "core.search.search_with_overlay or use repro.api.LearnedIndex",
+        DeprecationWarning, stacklevel=2)
     return S.search_with_overlay(idx, ov, queries, max_depth)

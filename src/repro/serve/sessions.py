@@ -1,34 +1,39 @@
 """Serving-side session table: session-id -> KV-cache slot, through a DILI.
 
-Admission upserts and eviction tombstones go through the online-update
-subsystem (`repro.online`): writes land in the tombstone overlay and the
-merge policy decides when to fold them through the host DILI (Algorithms
-7/8) and publish a fresh snapshot epoch — ONE `flatten()` per merge, never
-per admit/evict.  The hot lookup path is the fused snapshot+overlay device
-search (`core.search.search_with_overlay`): one jitted dispatch per query
-batch, depth-exact with batch-convergence early exit, query buffer donated —
-exact at every point between merges (DESIGN.md sections 8-9).
+Since the api redesign this sits on the public facade
+(`repro.api.LearnedIndex`): admissions are upserts, evictions are deletes,
+reads are the engine's fused snapshot+overlay lookup, and the merge policy
+decides when pending writes fold through the host tree (Alg. 7/8) and a
+fresh epoch publishes — ONE `flatten()` per merge, never per admit/evict
+(DESIGN.md sections 8-10).  The engine is a config choice; the default
+local engine serves a session table fine, but a sharded deployment only
+changes the `IndexConfig`.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..online import MergePolicy, OnlineIndex
+from ..api import IndexConfig, LearnedIndex, MergePolicy
 
 
 class SessionTable:
     def __init__(self, n_slots: int, warm_ids=None,
-                 policy: MergePolicy | None = None):
+                 policy: MergePolicy | None = None,
+                 config: IndexConfig | None = None):
         self.n_slots = n_slots
         self.free = list(range(n_slots))[::-1]
         warm = np.asarray(sorted(warm_ids or [1.0, 2.0]), np.float64)
         slots = np.array([self._take() for _ in warm], np.int64)
+        if policy is not None and config is not None:
+            raise ValueError("pass the merge policy inside `config` "
+                             "(IndexConfig(merge=...)), not both")
         # small default buffer: a session table sees bursty admit/evict, so
         # merge on fill (64 pending) or 256 writes of lag
-        self.index = OnlineIndex(
-            warm, slots, overlay_cap=64,
-            policy=policy or MergePolicy(max_fill=1.0, max_writes=256))
+        cfg = config or IndexConfig(
+            overlay_cap=64,
+            merge=policy or MergePolicy(max_fill=1.0, max_writes=256))
+        self.index = LearnedIndex.build(warm, slots, config=cfg)
 
     def _take(self) -> int:
         if not self.free:
@@ -43,7 +48,7 @@ class SessionTable:
     @property
     def dili(self):
         """The host writer (stats/introspection; may lag the overlay)."""
-        return self.index.dili
+        return self.index.host
 
     def admit(self, session_id: float) -> int:
         sid = float(session_id)

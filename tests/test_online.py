@@ -67,6 +67,7 @@ def test_overlay_capacity_doubling():
 
 
 def test_fused_lookup_precedence(rng):
+    from repro.core import search as S
     keys = make_keys("uniform", 4000, rng)
     d = bulk_load(keys)
     store = SnapshotStore()
@@ -76,13 +77,25 @@ def test_fused_lookup_precedence(rng):
     ov = ov.delete_batch([keys[11]])
     ova = overlay_device_arrays(ov)
     q = jnp.asarray([keys[10], keys[0] - 5.0, keys[11], keys[12]])
-    v, f = search_with_updates(store.idx, ova, q,
-                               max_depth=store.max_depth + 2)
+    # trip count comes from the DeviceSnapshot — no manual max_depth
+    v, f = S.search_with_overlay(store.idx, ova, q)
     v, f = np.asarray(v), np.asarray(f)
     assert f[0] and v[0] == 777        # overlay overrides snapshot value
     assert f[1] and v[1] == 888        # overlay-only key found
     assert not f[2]                    # tombstone hides snapshot hit
     assert f[3] and v[3] == 12         # untouched snapshot key
+
+
+def test_search_with_updates_deprecated(rng):
+    """The PR-2 alias still answers correctly but warns toward
+    search_with_overlay / the api facade."""
+    keys = make_keys("uniform", 1000, rng)
+    store = SnapshotStore()
+    store.publish(flatten(bulk_load(keys)))
+    ova = overlay_device_arrays(TombstoneOverlay.empty(4))
+    with pytest.warns(DeprecationWarning, match="search_with_overlay"):
+        v, f = search_with_updates(store.idx, ova, jnp.asarray(keys[:8]))
+    assert np.asarray(f).all()
 
 
 # ---------------------------------------------------------------------------
