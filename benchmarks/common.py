@@ -88,6 +88,19 @@ def queries_for(name: str, n: int = None, seed: int = 7) -> np.ndarray:
     return keys[rng.integers(0, len(keys), n or N_QUERIES)]
 
 
+N_WORKLOAD_OPS = int(os.environ.get("BENCH_WORKLOAD_OPS", "20000"))
+N_WORKLOAD_BATCH = int(os.environ.get("BENCH_WORKLOAD_BATCH", "256"))
+
+
+def workload_universe(n_keys: int = N_KEYS) -> np.ndarray:
+    """Loaded keys for oracle-checked workload replays: the even integers
+    in [0, 2*n_keys).  Integer-valued keys are exactly representable in f64
+    and (below 2^24) in f32, so the same stream drives the pallas engine
+    with zero quantization divergence; the generator draws insert keys from
+    the interleaved odd integers, disjoint by construction."""
+    return np.arange(0, 2 * n_keys, 2, dtype=np.float64)
+
+
 ROWS: list[dict] = []       # every csv_row, for machine-readable emission
 
 

@@ -35,8 +35,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from common import (DATASETS, N_QUERIES, baseline_for, csv_row, dataset,
-                    dili_for, index_for, queries_for, time_fn)
+from common import (DATASETS, N_QUERIES, N_WORKLOAD_BATCH, N_WORKLOAD_OPS,
+                    baseline_for, csv_row, dataset, dili_for, index_for,
+                    queries_for, time_fn, workload_universe)
 
 from repro.api import DeviceSnapshot                    # noqa: E402
 from repro.core import search as S                      # noqa: E402
@@ -434,13 +435,47 @@ def facade_bench():
         csv_row(f"facade,{ENGINE},{name},range_us", range_us)
 
 
+def workload_bench(preset: str) -> dict:
+    """YCSB-style mixed workload through the facade on ENGINE, oracle-
+    checked batch by batch (any divergence raises -> the job fails).
+
+    Returns BENCH_PR2.json-schema sections keyed `workload,<preset>` so
+    ``--workload X --pr2-json`` lands mixed-workload throughput in the
+    existing trajectory artifact.  Sized by BENCH_WORKLOAD_OPS /
+    BENCH_WORKLOAD_BATCH; keys are the integer workload universe (see
+    common.workload_universe), NOT the float datasets — popularity shape,
+    not key shape, is what a mixed workload measures, and integer keys keep
+    the oracle diff bit-exact on every engine including pallas/f32."""
+    from repro.api import IndexConfig, LearnedIndex
+    from repro.workloads import PRESETS, WorkloadRunner, generate_stream
+    spec = PRESETS[preset].scaled(n_ops=N_WORKLOAD_OPS,
+                                  batch_size=N_WORKLOAD_BATCH)
+    keys = workload_universe()
+    print(f"# workload: {preset} on the '{ENGINE}' engine "
+          f"({spec.n_ops} ops, oracle-checked)")
+    # default (auto) merge policy: write-heavy mixes must exercise the
+    # overlay -> merge -> republish lifecycle, not pile into the overlay
+    ix = LearnedIndex.build(keys, config=IndexConfig(
+        engine=ENGINE, sample_stride=4, overlay_cap=8192))
+    rep = WorkloadRunner(ix).run(generate_stream(spec, keys), spec=spec)
+    d = rep.to_json_dict()
+    csv_row(f"workload,{preset},{ENGINE},ops_per_s", d["ops_per_s"],
+            f"n_ops={d['n_ops']};merges={d['n_merges']};"
+            f"epoch={d['epoch']};divergences={d['n_divergences']}")
+    for op, n in rep.op_counts.items():
+        if n:
+            csv_row(f"workload,{preset},{ENGINE},{op}_us",
+                    1e6 * rep.op_seconds[op] / n, f"n={n}")
+    return {f"workload,{preset}": d}
+
+
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
        table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
        kernel_bench, facade_bench]
 
 
-def bench_pr2(out_path: str) -> dict:
+def bench_pr2(out_path: str, extra_sections: dict | None = None) -> dict:
     """Hot-path trajectory artifact (BENCH_PR2.json): re-measure the PR-2
     hot paths ALONGSIDE the pre-PR numbers (benchmarks/baseline_pre_pr2.json,
     captured on the pre-PR tree at the same scales) with derived speedups.
@@ -506,6 +541,10 @@ def bench_pr2(out_path: str) -> dict:
             us_per_query=range_us, engine=ENGINE)
         csv_row(f"pr2,facade_lookup,{name}", lookup_ns, f"engine={ENGINE}")
         csv_row(f"pr2,facade_range,{name}", range_us, f"engine={ENGINE}")
+    if extra_sections:
+        # mixed-workload sections from --workload: same artifact, same
+        # one-dict-per-section schema (ROADMAP: extend, don't fork)
+        out["sections"].update(extra_sections)
     with open(out_path, "w") as fh:
         json.dump(out, fh, indent=1)
     print(f"# wrote {out_path}")
@@ -525,18 +564,25 @@ def main() -> None:
                          "(skips the per-table sections unless --only set)")
     ap.add_argument("--engine", default="local",
                     choices=("local", "pallas", "sharded"),
-                    help="LearnedIndex engine for the facade sections and "
-                         "--pr2-json")
+                    help="LearnedIndex engine for the facade sections, "
+                         "--workload, and --pr2-json")
+    ap.add_argument("--workload", default="",
+                    help="replay a named workload preset (ycsb_a/b/c/e, "
+                         "dili_paper) through the --engine facade with "
+                         "oracle checking; BENCH_WORKLOAD_OPS sizes it")
     args = ap.parse_args()
     global ENGINE
     ENGINE = args.engine
-    if not args.pr2_json or args.only:
+    if args.only or not (args.pr2_json or args.workload):
         for fn in ALL:
             if args.only and args.only not in fn.__name__:
                 continue
             fn()
+    wl_sections: dict = {}
+    if args.workload:
+        wl_sections = workload_bench(args.workload)
     if args.pr2_json:
-        bench_pr2(args.pr2_json)
+        bench_pr2(args.pr2_json, extra_sections=wl_sections)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(dict(n_queries=N_QUERIES, rows=ROWS), fh, indent=1)

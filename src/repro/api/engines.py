@@ -96,6 +96,24 @@ def _merged_items(snap_k: np.ndarray, snap_v: np.ndarray, ov_k: np.ndarray,
     return mk[live], mv[live]
 
 
+def _overlay_summary(overlays) -> dict:
+    """The engine-independent overlay slice of `stats()`: every engine
+    reports the same keys with the same meanings (equivalence is pinned by
+    tests/test_api_engines.py).  `pending_writes` counts distinct pending
+    keys (live + tombstones) across all overlays; `overlay_fill` is the
+    worst single overlay's fill fraction — the number the merge policy's
+    max_fill trigger actually compares against."""
+    ovs = list(overlays)
+    count = sum(ov.count for ov in ovs)
+    tombs = sum(ov.n_tombstones for ov in ovs)
+    return dict(pending_writes=count,
+                overlay_live=count - tombs,
+                overlay_tombstones=tombs,
+                overlay_cap=sum(ov.cap for ov in ovs),
+                overlay_fill=max((ov.full_fraction for ov in ovs),
+                                 default=0.0))
+
+
 def _merge_range_windows(ks, vs, cnt, lo, hi, ov_k, ov_v, ov_t,
                          max_hits: int):
     """Resolve overlay state over per-query snapshot range windows.
@@ -171,6 +189,12 @@ def _overlay_exact_range(entries, lo, hi, max_hits: int, device_range):
     or merge each query's overlay slice host-side."""
     ov_k, ov_v, ov_t = entries
     fetch = max_hits + _tombstone_headroom(ov_k, ov_t, lo, hi)
+    if fetch > max_hits:
+        # pow2-quantize the over-fetch: headroom varies batch to batch under
+        # write-heavy mixes and every distinct fetch is a fresh executable;
+        # extra rows are clipped by the truncate/merge step below, so the
+        # result is identical
+        fetch = max_hits + (1 << (fetch - max_hits - 1).bit_length())
     ks, vs, cnt = device_range(lo, hi, fetch)
     ks, vs, cnt = np.asarray(ks), np.asarray(vs), np.asarray(cnt)
     if len(ov_k) == 0:
@@ -260,7 +284,7 @@ class LocalEngine:
         return dict(engine=self.name, epoch=self.oi.epoch,
                     max_depth=snap.max_depth,
                     snapshot_keys=int(self.oi.store.flat.n_pairs),
-                    pending_writes=self.oi.overlay.count,
+                    **_overlay_summary([self.oi.overlay]),
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
                     merge_reasons=dict(self.oi.merge_reasons),
                     device_bytes=snap.nbytes)
@@ -432,7 +456,7 @@ class PallasEngine:
         return dict(engine=self.name, epoch=self.epoch,
                     max_depth=self.flat.max_depth,
                     snapshot_keys=int(self.flat.n_pairs),
-                    pending_writes=self.overlay.count,
+                    **_overlay_summary([self.overlay]),
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
                     table_bytes=self._K.table_bytes(self.arrs),
                     kernel_eligible=(self._K.table_bytes(self.arrs)
@@ -593,14 +617,19 @@ class ShardedEngine:
 
     @property
     def epoch(self) -> int:
-        return self.sd.epoch
+        # publish-count semantics, like the other engines (the local
+        # engine's SnapshotStore and the pallas engine both count device
+        # republishes, so a fresh build is epoch 1 and every effective
+        # flush bumps it); `sd.epoch` (merge count) stays internal
+        return self.n_publishes
 
     def stats(self) -> dict:
-        return dict(engine=self.name, epoch=self.sd.epoch,
+        return dict(engine=self.name, epoch=self.epoch,
                     max_depth=self.sd.max_depth,
                     n_shards=self.sd.n_shards,
                     snapshot_keys=sum(int(f.n_pairs) for f in self.sd.flats),
-                    pending_writes=sum(ov.count for ov in self.sd.overlays),
+                    **_overlay_summary(self.sd.overlays),
+                    per_shard_pending=[ov.count for ov in self.sd.overlays],
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
                     n_publishes=self.n_publishes,
                     device_bytes=sum(int(np.prod(v.shape)) * v.dtype.itemsize

@@ -30,6 +30,7 @@ disjoint) combined overlay on top of the sharded snapshot lookup.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -164,6 +165,29 @@ def _empty_overlay(dtype) -> dict:
                 tomb=jnp.zeros(1, jnp.int8))
 
 
+# trace cache for the collective entry points: the shard_map body is a
+# fresh closure per call, so without this every batch would re-trace (and
+# on CPU re-tracing dominates the dispatch by orders of magnitude).  Keys
+# are the static closure parameters; Mesh hashes by device assignment +
+# axis names, so equivalent meshes share entries.  jax.jit adds the
+# per-shape executable cache on top.  LRU-bounded: a long-lived server
+# with varying a2a batch sizes mints one entry per padded length, and
+# each entry pins its compiled executables for the life of the process.
+_TRACE_CACHE: "OrderedDict" = OrderedDict()
+_TRACE_CACHE_MAX = 64
+
+
+def _cached_collective(key, make):
+    fn = _TRACE_CACHE.get(key)
+    if fn is None:
+        fn = _TRACE_CACHE[key] = jax.jit(make())
+        if len(_TRACE_CACHE) > _TRACE_CACHE_MAX:
+            _TRACE_CACHE.popitem(last=False)
+    else:
+        _TRACE_CACHE.move_to_end(key)
+    return fn
+
+
 def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
                    max_depth: int, axis: str = "data",
                    strategy: str = "gather", overlay: dict | None = None,
@@ -183,6 +207,9 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
     in_specs = ({k: P(axis) for k in sd_arrays if k != "boundaries"}
                 | {"boundaries": P()})
     ov_specs = {k: P() for k in ov}
+    cache_key = (mesh, axis, strategy, max_depth, has_dense,
+                 tuple(sorted(sd_arrays)), tuple(sorted(ov)),
+                 queries.shape[0] if strategy == "a2a" else None)
 
     if strategy == "gather":
         def body(local, bnd, ovr, q):
@@ -200,9 +227,10 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
                                      scatter_dimension=0, tiled=True)
             return v, f > 0
 
-        fn = shard_map(body, mesh=mesh,
-                       in_specs=(in_specs, P(), ov_specs, P(axis)),
-                       out_specs=(P(axis), P(axis)))
+        fn = _cached_collective(cache_key, lambda: shard_map(
+            body, mesh=mesh,
+            in_specs=(in_specs, P(), ov_specs, P(axis)),
+            out_specs=(P(axis), P(axis))))
         return fn(sd_arrays, bounds, ov, queries)
 
     elif strategy == "a2a":
@@ -240,9 +268,10 @@ def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,
             inv = jnp.argsort(order)
             return vs[inv], fs[inv], jnp.sum(~ok).astype(jnp.int32)[None]
 
-        fn = shard_map(body, mesh=mesh,
-                       in_specs=(in_specs, P(), ov_specs, P(axis)),
-                       out_specs=(P(axis), P(axis), P(axis)))
+        fn = _cached_collective(cache_key, lambda: shard_map(
+            body, mesh=mesh,
+            in_specs=(in_specs, P(), ov_specs, P(axis)),
+            out_specs=(P(axis), P(axis), P(axis))))
         return fn(sd_arrays, bounds, ov, queries)
     raise ValueError(strategy)
 
@@ -298,9 +327,12 @@ def sharded_range_query(mesh: Mesh, sd_arrays: dict, lo: jnp.ndarray,
         vs = jnp.where(filled, vs, -1)
         return ks, vs, jnp.minimum(total, max_hits).astype(jnp.int32)
 
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(in_specs, P(), P(axis), P(axis)),
-                   out_specs=(P(axis, None), P(axis, None), P(axis)))
+    fn = _cached_collective(
+        (mesh, axis, "range", max_hits, tuple(sorted(sd_arrays))),
+        lambda: shard_map(
+            body, mesh=mesh,
+            in_specs=(in_specs, P(), P(axis), P(axis)),
+            out_specs=(P(axis, None), P(axis, None), P(axis))))
     return fn(sd_arrays, bounds, lo, hi)
 
 
@@ -405,7 +437,17 @@ def combined_overlay_arrays(sd: ShardedDILI, dtype=jnp.float64) -> dict:
     ks = np.concatenate([p[0] for p in parts])
     vs = np.concatenate([p[1] for p in parts])
     tb = np.concatenate([p[2] for p in parts])
-    cap = 1 << max(1, math.ceil(math.log2(max(len(ks), 1))))
+    # pad to (at least) the summed per-shard capacities, not the populated
+    # count: caps start at the configured overlay_cap and only grow by
+    # doubling, so the replicated mirror keeps ONE shape from idle through
+    # write-heavy periods and the fused collective re-traces only when a
+    # shard's overlay doubles — the exact policy of the local engine's
+    # cap-sized mirror (overlay_device_arrays).  Pow2-of-count padding
+    # instead re-traced at every pow2 crossing.  The mirror is rebuilt only
+    # when the _ov_cache was invalidated by a write or merge, never on the
+    # read path, so the cap-sized concat is off the serving hot loop.
+    floor = sum(ov.cap for ov in sd.overlays)
+    cap = 1 << max(1, math.ceil(math.log2(max(len(ks), floor, 1))))
     out = dict(keys=jnp.asarray(_pad_to(ks, cap, np.inf), dtype),
                vals=jnp.asarray(_pad_to(vs, cap, 0), jnp.int64),
                tomb=jnp.asarray(_pad_to(tb, cap, 0), jnp.int8))

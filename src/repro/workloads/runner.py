@@ -1,0 +1,199 @@
+"""`WorkloadRunner`: drive any `repro.api.LearnedIndex` engine through an
+op stream while diffing every batch against the `SortedOracle`.
+
+The runner is the differential half of the workload subsystem: the
+generator says *what* happens, the oracle says what the answers *must* be,
+and the runner replays the stream engine-batch-wise, checking
+
+  * lookup hits AND misses (found masks bit-equal, values equal on hits),
+  * range windows (keys/vals/counts bit-equal including padding),
+  * write visibility (every upsert batch is immediately readable with its
+    new values, every delete batch immediately invisible — the overlay
+    path, not just post-merge state),
+  * final content (`items()` equals the oracle after the whole stream).
+
+Timing covers only the engine calls (oracle bookkeeping and diffing run
+off the clock), so the same replay that proves correctness also yields the
+mixed-workload throughput numbers `benchmarks/run.py --workload` records.
+
+A divergence raises `WorkloadDivergence` by default (CI-friendly: a broken
+engine fails the job); pass strict=False to collect divergence messages
+into the report instead, e.g. to assert that an injected fault IS caught.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .generator import OPS, OpBatch, WorkloadSpec, stream_op_counts
+from .oracle import SortedOracle
+
+
+class WorkloadDivergence(AssertionError):
+    """An engine answered differently from the ground-truth oracle."""
+
+
+@dataclass
+class WorkloadReport:
+    """Outcome of one stream replay: throughput + divergence record."""
+    name: str
+    engine: str
+    n_ops: int = 0
+    n_batches: int = 0
+    op_counts: dict = field(default_factory=lambda: {o: 0 for o in OPS})
+    op_seconds: dict = field(default_factory=lambda: {o: 0.0 for o in OPS})
+    divergences: list = field(default_factory=list)
+    final_stats: dict = field(default_factory=dict)
+
+    @property
+    def wall_s(self) -> float:
+        return sum(self.op_seconds.values())
+
+    @property
+    def ops_per_s(self) -> float:
+        return self.n_ops / max(self.wall_s, 1e-12)
+
+    def to_json_dict(self) -> dict:
+        return dict(name=self.name, engine=self.engine, n_ops=self.n_ops,
+                    n_batches=self.n_batches, ops_per_s=self.ops_per_s,
+                    us_per_op=1e6 * self.wall_s / max(self.n_ops, 1),
+                    op_counts=dict(self.op_counts),
+                    op_seconds={k: round(v, 6)
+                                for k, v in self.op_seconds.items()},
+                    n_divergences=len(self.divergences),
+                    divergences=self.divergences[:8],
+                    pending_writes=self.final_stats.get("pending_writes"),
+                    epoch=self.final_stats.get("epoch"),
+                    n_merges=self.final_stats.get("n_merges"))
+
+
+def _diff(tag: str, got, want) -> list[str]:
+    """Bit-exact comparison; returns human-pointable messages, not raises."""
+    out = []
+    for part, g, w in zip(("keys/vals", "vals", "found/counts"),
+                          got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        if np.array_equal(g, w):
+            continue
+        if g.shape != w.shape:
+            out.append(f"{tag}: {part} shape diverge "
+                       f"(got {g.shape}, want {w.shape})")
+            continue
+        bad = np.nonzero(~np.isclose(g.astype(np.float64),
+                                     w.astype(np.float64), equal_nan=True))
+        lane = bad[0][0] if len(bad[0]) else -1
+        out.append(f"{tag}: {part} diverge at lane {lane} "
+                   f"(got {g.reshape(-1)[:4]}..., "
+                   f"want {w.reshape(-1)[:4]}...)")
+    return out
+
+
+class WorkloadRunner:
+    """Replay `OpBatch` streams through one `LearnedIndex`, oracle-checked.
+
+    check=False turns the runner into a pure throughput driver (no oracle,
+    no diffs) for perf sweeps where the keys are not exactly representable
+    in the engine's dtype (the pallas engine quantizes to f32; the
+    differential contract requires the integer-key convention)."""
+
+    def __init__(self, index, check: bool = True, strict: bool = True,
+                 verify_writes: bool = True, final_check: bool = True):
+        self.index = index
+        self.check = check
+        self.strict = strict
+        self.verify_writes = verify_writes and check
+        self.final_check = final_check and check
+        k, v = index.items()
+        self.oracle = SortedOracle(k, v) if check else None
+
+    # -- one batch -----------------------------------------------------------
+
+    def _replay(self, i: int, b: OpBatch, report: WorkloadReport) -> None:
+        ix, oc = self.index, self.oracle
+        if b.op == "lookup":
+            t0 = time.perf_counter()
+            v, f = ix.lookup(b.keys)
+            report.op_seconds["lookup"] += time.perf_counter() - t0
+            if self.check:
+                wv, wf = oc.lookup(b.keys)
+                msgs = _diff(f"batch {i} lookup", (f, v[f]),
+                             (wf, wv[wf] if len(wv) else wv))
+                report.divergences += msgs
+        elif b.op == "upsert":
+            t0 = time.perf_counter()
+            ix.upsert(b.keys, b.vals)
+            report.op_seconds["upsert"] += time.perf_counter() - t0
+            if self.check:
+                oc.upsert(b.keys, b.vals)
+                if self.verify_writes:
+                    v, f = ix.lookup(b.keys)
+                    wv, wf = oc.lookup(b.keys)
+                    report.divergences += _diff(
+                        f"batch {i} upsert-visibility", (f, v[f]), (wf, wv[wf]))
+        elif b.op == "delete":
+            t0 = time.perf_counter()
+            ix.delete(b.keys)
+            report.op_seconds["delete"] += time.perf_counter() - t0
+            if self.check:
+                oc.delete(b.keys)
+                if self.verify_writes:
+                    _, f = ix.lookup(b.keys)
+                    if f.any():
+                        report.divergences.append(
+                            f"batch {i} delete-visibility: "
+                            f"{int(f.sum())}/{len(f)} deleted keys still "
+                            f"found")
+        else:                                    # range
+            mh = getattr(self, "_max_hits", 64)
+            t0 = time.perf_counter()
+            ks, vs, cnt = ix.range(b.lo, b.hi, max_hits=mh)
+            report.op_seconds["range"] += time.perf_counter() - t0
+            if self.check:
+                want = oc.range(b.lo, b.hi, max_hits=mh)
+                report.divergences += _diff(f"batch {i} range",
+                                            (ks, vs, cnt), want)
+
+    # -- the stream ----------------------------------------------------------
+
+    def run(self, batches: list[OpBatch],
+            spec: WorkloadSpec | None = None,
+            name: str = "") -> WorkloadReport:
+        self._max_hits = spec.max_hits if spec is not None else 64
+        report = WorkloadReport(
+            name=name or (spec.name if spec is not None else "stream"),
+            engine=self.index.engine)
+        report.op_counts = stream_op_counts(batches)
+        for i, b in enumerate(batches):
+            n_before = len(report.divergences)
+            self._replay(i, b, report)
+            report.n_batches += 1
+            report.n_ops += b.n_ops
+            if self.strict and len(report.divergences) > n_before:
+                raise WorkloadDivergence(
+                    f"{report.name} on engine {report.engine!r}: "
+                    + "; ".join(report.divergences[n_before:]))
+        if self.final_check:
+            k, v = self.index.items()
+            wk, wv = self.oracle.items()
+            msgs = _diff(f"{report.name} final items()", (k, v), (wk, wv))
+            report.divergences += msgs
+            if self.strict and msgs:
+                raise WorkloadDivergence("; ".join(msgs))
+        report.final_stats = self.index.stats()
+        return report
+
+
+def run_preset(index, preset_or_spec, loaded_keys=None, **scale
+               ) -> WorkloadReport:
+    """One-call convenience: resolve a preset name (or take a spec),
+    generate its stream over the index's current content, and replay it."""
+    from .generator import PRESETS, generate_stream
+    spec = (PRESETS[preset_or_spec].scaled(**scale)
+            if isinstance(preset_or_spec, str) else preset_or_spec)
+    if loaded_keys is None:
+        loaded_keys = index.items()[0]
+    batches = generate_stream(spec, loaded_keys)
+    return WorkloadRunner(index).run(batches, spec=spec)

@@ -114,6 +114,61 @@ def test_write_and_delete_visibility_equivalence(fleet):
         np.testing.assert_array_equal(v, v0, err_msg=e)
 
 
+STATS_CONTRACT = frozenset((
+    "engine", "epoch", "max_depth", "snapshot_keys", "pending_writes",
+    "overlay_live", "overlay_tombstones", "overlay_cap", "overlay_fill",
+    "n_flattens", "n_merges", "device_bytes"))
+
+
+def test_stats_contract_equivalence():
+    """Every engine reports the same stats keys with the same meanings:
+    epoch counts device publishes (1 after build, +1 per effective flush —
+    the sharded engine used to count merges from 0), and the overlay
+    breakdown (pending/live/tombstones/cap/fill) is identical for the same
+    write history on all three engines."""
+    rng = np.random.default_rng(42)
+    keys = np.unique(rng.integers(0, 1 << 21, 1200)).astype(np.float64)
+    cfg = IndexConfig(merge=manual_merge_policy(), overlay_cap=128)
+    ixs = {e: LearnedIndex.build(keys, config=cfg.with_engine(e))
+           for e in ENGINES}
+    for e, ix in ixs.items():
+        s = ix.stats()
+        assert STATS_CONTRACT <= set(s), e
+        assert s["epoch"] == 1 and ix.epoch == 1, e
+        assert (s["pending_writes"], s["overlay_live"],
+                s["overlay_tombstones"], s["overlay_fill"]) == (0, 0, 0, 0.0)
+
+    new = np.setdiff1d(keys[:50] + 1.0, keys)      # 50 fresh integer keys
+    dead = np.unique(keys[rng.integers(100, 900, 64)])
+    for ix in ixs.values():
+        ix.upsert(new, np.arange(len(new), dtype=np.int64))
+        ix.delete(dead)
+    ref = ixs["local"].stats()
+    assert ref["pending_writes"] == len(new) + len(dead)
+    assert ref["overlay_live"] == len(new)
+    assert ref["overlay_tombstones"] == len(dead)
+    for e in ENGINES[1:]:
+        s = ixs[e].stats()
+        for k in ("pending_writes", "overlay_live", "overlay_tombstones"):
+            assert s[k] == ref[k], (e, k)
+        assert s["overlay_cap"] >= s["pending_writes"], e
+        assert 0.0 < s["overlay_fill"] <= 1.0, e
+    # sharded: per-shard breakdown sums to the total (the old stats path
+    # had no per-shard visibility at all)
+    sh = ixs["sharded"].stats()
+    assert sum(sh["per_shard_pending"]) == sh["pending_writes"]
+
+    for e, ix in ixs.items():
+        ix.flush()
+        s = ix.stats()
+        assert s["epoch"] == 2 and ix.epoch == 2, e
+        assert (s["pending_writes"], s["overlay_fill"]) == (0, 0.0), e
+        assert s["n_merges"] == 1, e
+        # an empty flush must NOT bump the publish epoch on any engine
+        ix.flush()
+        assert ix.stats()["epoch"] == 2, e
+
+
 def test_pallas_engine_large_magnitude_keys_exact():
     """Regression: at 1.6e9 key magnitude f32 ulp is 128, the section-7
     nudge is unattainable, and compiled XLA single-rounds `a + b*q` past
@@ -134,6 +189,7 @@ def test_pallas_engine_large_magnitude_keys_exact():
     assert not f2.any()
 
 
+@pytest.mark.slow
 def test_sharded_engine_multi_device_equivalence():
     """The facade on an 8-shard mesh answers exactly like the local engine
     (subprocess: the main test process must keep seeing 1 device)."""
@@ -152,6 +208,16 @@ def test_sharded_engine_multi_device_equivalence():
         for ix in (a, b):
             ix.upsert(keys[:50] + 0.25, np.arange(50))
             ix.delete(keys[100:150])
+        # stats contract on a REAL multi-shard mesh: totals match the
+        # local engine, per-shard pending sums to the total, publish-epoch
+        # semantics agree
+        sa, sb = a.stats(), b.stats()
+        for k in ("pending_writes", "overlay_live", "overlay_tombstones",
+                  "epoch"):
+            assert sa[k] == sb[k], (k, sa[k], sb[k])
+        assert sb["pending_writes"] == 100
+        assert sum(sb["per_shard_pending"]) == 100
+        assert len(sb["per_shard_pending"]) == 8
         va, fa = a.lookup(q); vb, fb = b.lookup(q)
         assert np.array_equal(fa, fb) and np.array_equal(va[fa], vb[fb])
         lo = keys[rng.integers(0, len(keys) - 200, 256)]
@@ -160,6 +226,8 @@ def test_sharded_engine_multi_device_equivalence():
         for x, y in zip(ra, rb):
             assert np.array_equal(x, y)
         a.flush(); b.flush()
+        assert a.stats()["epoch"] == b.stats()["epoch"] == 2
+        assert b.stats()["pending_writes"] == 0
         va, fa = a.lookup(q); vb, fb = b.lookup(q)
         assert np.array_equal(fa, fb) and np.array_equal(va[fa], vb[fb])
         # a2a with a skewed batch: bucket overflow must fall back to the

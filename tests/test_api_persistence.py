@@ -1,0 +1,105 @@
+"""save/load round-trips on every engine (satellite of the workload PR:
+only construction paths were covered before).
+
+`save()` persists the *logical* content — live keys/vals including pending
+overlay writes — plus the config; `load()` rebuilds the tree.  So the
+contract under test is: (1) content survives the round-trip bit-exactly,
+including un-flushed upserts and tombstones; (2) a loaded index is fully
+live — it accepts new writes, folds them on flush, and keeps answering
+exactly; (3) the engine is part of the saved config but can be overridden
+at load (build local, serve pallas/sharded)."""
+import numpy as np
+import pytest
+
+from repro.api import IndexConfig, LearnedIndex, manual_merge_policy
+
+ENGINES = ("local", "pallas", "sharded")
+
+
+def _keyset():
+    rng = np.random.default_rng(77)
+    keys = np.unique(rng.integers(0, 1 << 22, 1500)).astype(np.float64)
+    vals = rng.integers(0, 1 << 30, len(keys)).astype(np.int64)
+    return keys, vals
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_save_load_round_trip_with_pending_writes(tmp_path, engine):
+    keys, vals = _keyset()
+    cfg = IndexConfig(engine=engine, merge=manual_merge_policy(),
+                      overlay_cap=128)
+    ix = LearnedIndex.build(keys, vals, config=cfg)
+    new = np.setdiff1d(keys[:64] + 1.0, keys)      # odd offsets: fresh keys
+    ix.upsert(new, np.arange(len(new), dtype=np.int64) + 9_000_000)
+    dead = keys[200:240]
+    ix.delete(dead)
+    assert ix.stats()["pending_writes"] > 0        # round-trips UNFLUSHED
+
+    path = str(tmp_path / f"{engine}.npz")
+    ix.save(path)
+    ix2 = LearnedIndex.load(path)
+    assert ix2.engine == engine
+    assert ix2.config.overlay_cap == 128
+    # a rebuild folds everything: the loaded index starts clean
+    assert ix2.stats()["pending_writes"] == 0
+    assert ix2.epoch == 1
+
+    k1, v1 = ix.items()
+    k2, v2 = ix2.items()
+    np.testing.assert_array_equal(k2, k1)
+    np.testing.assert_array_equal(v2, v1)
+    # pending state semantics survived: upserts found, tombstones gone
+    _, f_new = ix2.lookup(new)
+    _, f_dead = ix2.lookup(dead)
+    assert f_new.all() and not f_dead.any()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_load_then_upsert_then_flush(tmp_path, engine):
+    """The loaded index must be a live writer, not a read-only replica."""
+    keys, vals = _keyset()
+    path = str(tmp_path / "ix")
+    LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine=engine, merge=manual_merge_policy())).save(path)
+
+    ix = LearnedIndex.load(path)
+    more = np.setdiff1d(keys[300:380] + 1.0, keys)
+    ix.upsert(more, np.arange(len(more), dtype=np.int64) + 7_000_000)
+    ix.delete(keys[:32])
+    st = ix.flush()
+    assert st["pending_writes"] == 0
+    assert st["epoch"] == 2                        # one republish post-load
+
+    v, f = ix.lookup(more)
+    assert f.all()
+    np.testing.assert_array_equal(
+        v, np.arange(len(more), dtype=np.int64) + 7_000_000)
+    _, f2 = ix.lookup(keys[:32])
+    assert not f2.any()
+    # and the folded content round-trips AGAIN (save after mutate)
+    ix.save(str(tmp_path / "ix2"))
+    k3, v3 = LearnedIndex.load(str(tmp_path / "ix2")).items()
+    k1, v1 = ix.items()
+    np.testing.assert_array_equal(k3, k1)
+    np.testing.assert_array_equal(v3, v1)
+
+
+def test_load_with_engine_override(tmp_path):
+    """Cross-engine migration: build local, load onto pallas and sharded;
+    content and answers are identical (integer keys: f32-exact)."""
+    keys, vals = _keyset()
+    cfg = IndexConfig(merge=manual_merge_policy())
+    path = str(tmp_path / "local.npz")
+    src = LearnedIndex.build(keys, vals, config=cfg)
+    src.save(path)
+    q = np.concatenate([keys[::7], keys[:64] + 3.0])
+    v0, f0 = src.lookup(q)
+    for engine in ENGINES[1:]:
+        dst = LearnedIndex.load(path, config=cfg.with_engine(engine))
+        assert dst.engine == engine
+        v, f = dst.lookup(q)
+        np.testing.assert_array_equal(f, f0, err_msg=engine)
+        np.testing.assert_array_equal(v[f], v0[f0], err_msg=engine)
+        k1, v1 = dst.items()
+        np.testing.assert_array_equal(k1, keys, err_msg=engine)
+        np.testing.assert_array_equal(v1, vals, err_msg=engine)

@@ -1,0 +1,88 @@
+"""Hypothesis stateful test: arbitrary interleavings of upsert / delete /
+flush / lookup / range on a `LearnedIndex` vs a plain dict model.
+
+The fixed workload scenarios (tests/test_workloads.py) replay *seeded*
+streams; this machine lets hypothesis DRIVE the interleaving, which is
+what catches overlay/merge sequencing bugs the fixed grids miss
+(upsert-delete-upsert of one key across a flush boundary, deletes of
+never-inserted keys, merges triggered mid-sequence by the auto policy,
+range queries straddling freshly tombstoned runs, ...).
+
+Gated on hypothesis via the repo's importorskip pattern
+(tests/test_dili_property.py): absent the dependency, the module skips."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import settings, strategies as st
+from hypothesis.stateful import RuleBasedStateMachine, invariant, rule
+
+from repro.api import IndexConfig, LearnedIndex
+
+# a small integer key domain maximizes collisions between rules — the
+# interesting interleavings are repeated writes to the SAME key
+KEYS = st.integers(min_value=0, max_value=400)
+
+
+class IndexVsModel(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        base = np.arange(0, 128, dtype=np.float64) * 3
+        # tiny overlay + default auto-merge policy: hypothesis sequences
+        # cross merge boundaries without an explicit flush rule firing
+        self.ix = LearnedIndex.build(
+            base, config=IndexConfig(engine="local", overlay_cap=16))
+        self.model = dict(zip(base.tolist(), range(len(base))))
+        self.seq = 10_000
+
+    @rule(ks=st.lists(KEYS, min_size=1, max_size=8))
+    def upsert(self, ks):
+        vals = np.arange(self.seq, self.seq + len(ks), dtype=np.int64)
+        self.seq += len(ks)
+        self.ix.upsert(np.asarray(ks, np.float64), vals)
+        # last-write-wins within the batch, like the engine
+        self.model.update(zip((float(k) for k in ks), vals.tolist()))
+
+    @rule(ks=st.lists(KEYS, min_size=1, max_size=8))
+    def delete(self, ks):
+        self.ix.delete(np.asarray(ks, np.float64))
+        for k in ks:
+            self.model.pop(float(k), None)
+
+    @rule()
+    def flush(self):
+        st_ = self.ix.flush()
+        assert st_["pending_writes"] == 0
+
+    @rule(ks=st.lists(KEYS, min_size=1, max_size=16))
+    def lookup(self, ks):
+        v, f = self.ix.lookup(np.asarray(ks, np.float64))
+        for k, vi, fi in zip(ks, v.tolist(), f.tolist()):
+            assert fi == (float(k) in self.model), (k, "visibility")
+            if fi:
+                assert vi == self.model[float(k)], (k, "payload")
+
+    @rule(lo=KEYS, span=st.integers(min_value=1, max_value=60))
+    def range_query(self, lo, span):
+        ks, vs, cnt = self.ix.range([float(lo)], [float(lo + span)],
+                                    max_hits=32)
+        want = sorted(k for k in self.model if lo <= k < lo + span)[:32]
+        assert cnt[0] == len(want)
+        np.testing.assert_array_equal(ks[0][: cnt[0]], want)
+        np.testing.assert_array_equal(
+            vs[0][: cnt[0]], [self.model[k] for k in want])
+
+    @invariant()
+    def content_matches(self):
+        # O(n) but n is tiny; run at every step so a divergence is pinned
+        # to the exact rule that introduced it
+        k, v = self.ix.items()
+        want = sorted(self.model)
+        np.testing.assert_array_equal(k, want)
+        np.testing.assert_array_equal(v, [self.model[x] for x in want])
+
+
+TestIndexVsModel = IndexVsModel.TestCase
+TestIndexVsModel.settings = settings(
+    max_examples=12, stateful_step_count=25, deadline=None)

@@ -110,6 +110,7 @@ def test_save_load_without_npz_suffix(rng, tmp_path):
     np.testing.assert_array_equal(ix2.items()[0], keys)
 
 
+@pytest.mark.slow
 def test_sharded_build_clamps_shards_to_key_budget():
     """A tiny index must not crash on a many-shard request: shard count
     clamps to len(keys)//2 and to the device count (in-process: 1)."""

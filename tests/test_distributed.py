@@ -23,6 +23,7 @@ def run_sub(code: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_index_gather_and_a2a():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
@@ -46,6 +47,7 @@ def test_sharded_index_gather_and_a2a():
     assert "DIST-OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_online_updates():
     """Per-shard overlays absorb upserts/deletes without a global rebuild;
     merge republishes only the touched shards' rows."""
@@ -89,6 +91,7 @@ def test_sharded_online_updates():
     assert "DIST-ONLINE-OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_range_query():
     """Per-shard sorted-pair bisection + prefix-offset psum assembly matches
     a brute-force numpy oracle, including windows spanning shard boundaries
@@ -125,6 +128,7 @@ def test_sharded_range_query():
     assert "DIST-RANGE-OK" in out
 
 
+@pytest.mark.slow
 def test_small_mesh_train_step_shardings():
     out = run_sub("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
@@ -155,6 +159,7 @@ def test_small_mesh_train_step_shardings():
     assert "MESH-TRAIN-OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_meshes(tmp_path):
     out = run_sub(f"""
         import jax, jax.numpy as jnp, numpy as np
@@ -185,6 +190,7 @@ def test_elastic_restore_across_meshes(tmp_path):
     assert "ELASTIC-OK" in out
 
 
+@pytest.mark.slow
 def test_psum_int8_compression_collective():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np

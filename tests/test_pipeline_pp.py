@@ -1,7 +1,10 @@
 """GPipe pipeline parallelism over the pod axis (subprocess, 8 devices)."""
+import pytest
+
 from tests.test_distributed import run_sub
 
 
+@pytest.mark.slow
 def test_pipeline_forward_matches_reference():
     out = run_sub("""
         import dataclasses, jax, jax.numpy as jnp
@@ -25,6 +28,7 @@ def test_pipeline_forward_matches_reference():
     assert "PP-OK" in out
 
 
+@pytest.mark.slow
 def test_pipeline_gradients_flow():
     out = run_sub("""
         import dataclasses, jax, jax.numpy as jnp
