@@ -435,38 +435,102 @@ def facade_bench():
         csv_row(f"facade,{ENGINE},{name},range_us", range_us)
 
 
-def workload_bench(preset: str) -> dict:
+def _maint_config(mode: str):
+    from repro.api import MaintenanceConfig
+    if mode == "off":
+        return None
+    return MaintenanceConfig(background=(mode == "background"))
+
+
+def _latency_percentiles(timings: list[dict]) -> dict:
+    """merge/publish wall-time percentiles (ms) over the run's merges."""
+    if not timings:
+        return dict(n_publishes=0)
+    out: dict = dict(n_publishes=len(timings))
+    for field in ("merge_s", "publish_s"):
+        xs = np.array([t[field] for t in timings]) * 1e3
+        key = field[:-2]                      # merge_s -> merge
+        out[f"{key}_ms_p50"] = float(np.percentile(xs, 50))
+        out[f"{key}_ms_p95"] = float(np.percentile(xs, 95))
+        out[f"{key}_ms_max"] = float(xs.max())
+    out["dirty_row_fraction_mean"] = float(
+        np.mean([t["dirty_frac"] for t in timings]))
+    return out
+
+
+def workload_bench(preset: str, maint_mode: str) -> dict:
     """YCSB-style mixed workload through the facade on ENGINE, oracle-
     checked batch by batch (any divergence raises -> the job fails).
 
-    Returns BENCH_PR2.json-schema sections keyed `workload,<preset>` so
-    ``--workload X --pr2-json`` lands mixed-workload throughput in the
-    existing trajectory artifact.  Sized by BENCH_WORKLOAD_OPS /
-    BENCH_WORKLOAD_BATCH; keys are the integer workload universe (see
-    common.workload_universe), NOT the float datasets — popularity shape,
-    not key shape, is what a mixed workload measures, and integer keys keep
-    the oracle diff bit-exact on every engine including pallas/f32."""
+    Returns BENCH_PR2.json-schema sections keyed `workload,<preset>`
+    (plus `,bg` for background mode) so ``--workload X --pr2-json`` lands
+    mixed-workload throughput AND merge/publish latency percentiles in
+    the existing trajectory artifact.  `maint_mode` "compare" runs the
+    preset twice — full-flatten baseline vs incremental maintenance — so
+    the artifact records the publish-latency delta the maintenance
+    subsystem buys.  Sized by BENCH_WORKLOAD_OPS / BENCH_WORKLOAD_BATCH;
+    keys are the integer workload universe (see common.workload_universe),
+    NOT the float datasets — popularity shape, not key shape, is what a
+    mixed workload measures, and integer keys keep the oracle diff
+    bit-exact on every engine including pallas/f32."""
     from repro.api import IndexConfig, LearnedIndex
-    from repro.workloads import PRESETS, WorkloadRunner, generate_stream
+    from repro.workloads import (PRESETS, WorkloadDivergence, WorkloadRunner,
+                                 generate_stream)
     spec = PRESETS[preset].scaled(n_ops=N_WORKLOAD_OPS,
                                   batch_size=N_WORKLOAD_BATCH)
     keys = workload_universe()
-    print(f"# workload: {preset} on the '{ENGINE}' engine "
-          f"({spec.n_ops} ops, oracle-checked)")
-    # default (auto) merge policy: write-heavy mixes must exercise the
-    # overlay -> merge -> republish lifecycle, not pile into the overlay
-    ix = LearnedIndex.build(keys, config=IndexConfig(
-        engine=ENGINE, sample_stride=4, overlay_cap=8192))
-    rep = WorkloadRunner(ix).run(generate_stream(spec, keys), spec=spec)
-    d = rep.to_json_dict()
-    csv_row(f"workload,{preset},{ENGINE},ops_per_s", d["ops_per_s"],
-            f"n_ops={d['n_ops']};merges={d['n_merges']};"
-            f"epoch={d['epoch']};divergences={d['n_divergences']}")
-    for op, n in rep.op_counts.items():
-        if n:
-            csv_row(f"workload,{preset},{ENGINE},{op}_us",
-                    1e6 * rep.op_seconds[op] / n, f"n={n}")
-    return {f"workload,{preset}": d}
+    suffixes = {"off": "", "incremental": ",maint", "background": ",bg"}
+    runs = ([("", "off"), (",maint", "incremental")]
+            if maint_mode == "compare" else
+            [(suffixes[maint_mode], maint_mode)])
+    sections: dict = {}
+    for suffix, mode in runs:
+        print(f"# workload: {preset} on the '{ENGINE}' engine "
+              f"({spec.n_ops} ops, oracle-checked, maintenance={mode})")
+        # default (auto) merge policy: write-heavy mixes must exercise the
+        # overlay -> merge -> republish lifecycle, not pile into the overlay
+        ix = LearnedIndex.build(keys, config=IndexConfig(
+            engine=ENGINE, sample_stride=4, overlay_cap=8192,
+            maintenance=_maint_config(mode)))
+        rep = WorkloadRunner(ix).run(generate_stream(spec, keys), spec=spec)
+        d = rep.to_json_dict()
+        d["maintenance"] = mode
+        # flush = the synchronous barrier: folds the tail of pending
+        # writes and drains any in-flight background merge, so the
+        # reported counts/percentiles are deterministic and complete
+        # (sampling mid-fold used to report merges=0 racily)
+        st = ix.flush()
+        if st.get("maint_errors"):
+            # the runner's in-stream check can race an in-flight worker;
+            # errors are cumulative, so re-assert after the flush barrier
+            raise WorkloadDivergence(
+                f"{preset}: {st['maint_errors']} background maintenance "
+                f"task(s) failed\n" + "\n".join(st.get("maint_error_logs",
+                                                       [])))
+        d["n_merges"] = st["n_merges"]
+        d["epoch"] = st["epoch"]
+        d.update(_latency_percentiles(ix.maint_timings()))
+        d["n_retrains"] = st["n_retrains"]
+        d["n_incremental_flattens"] = st["n_incremental_flattens"]
+        ix.close()
+        tag = f"workload,{preset}{suffix}"
+        csv_row(f"{tag},{ENGINE},ops_per_s", d["ops_per_s"],
+                f"n_ops={d['n_ops']};merges={d['n_merges']};"
+                f"epoch={d['epoch']};divergences={d['n_divergences']};"
+                f"maintenance={mode}")
+        for op, n in rep.op_counts.items():
+            if n:
+                csv_row(f"{tag},{ENGINE},{op}_us",
+                        1e6 * rep.op_seconds[op] / n, f"n={n}")
+        if d.get("n_publishes"):
+            csv_row(f"{tag},{ENGINE},merge_ms_p50", d["merge_ms_p50"],
+                    f"p95={d['merge_ms_p95']:.1f};max={d['merge_ms_max']:.1f}")
+            csv_row(f"{tag},{ENGINE},publish_ms_p50", d["publish_ms_p50"],
+                    f"p95={d['publish_ms_p95']:.1f};"
+                    f"max={d['publish_ms_max']:.1f};"
+                    f"dirty={d['dirty_row_fraction_mean']:.3f}")
+        sections[tag] = d
+    return sections
 
 
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
@@ -567,9 +631,19 @@ def main() -> None:
                     help="LearnedIndex engine for the facade sections, "
                          "--workload, and --pr2-json")
     ap.add_argument("--workload", default="",
-                    help="replay a named workload preset (ycsb_a/b/c/e, "
-                         "dili_paper) through the --engine facade with "
-                         "oracle checking; BENCH_WORKLOAD_OPS sizes it")
+                    help="comma-separated workload presets (ycsb_a/b/c/e, "
+                         "dili_paper, shift_fb_logn, ttl_storm) replayed "
+                         "through the --engine facade with oracle "
+                         "checking; one workload,<preset> section each; "
+                         "BENCH_WORKLOAD_OPS sizes them")
+    ap.add_argument("--maintenance", default="off",
+                    choices=("off", "incremental", "background", "compare"),
+                    help="merge pipeline for --workload runs: legacy full "
+                         "flatten (default — keeps pre-PR5 invocations at "
+                         "their original cost), adaptive (splice+retrain), "
+                         "background thread, or 'compare' = off AND "
+                         "incremental back-to-back (records the latency "
+                         "delta; what BENCH_PR2.json is emitted with)")
     args = ap.parse_args()
     global ENGINE
     ENGINE = args.engine
@@ -580,7 +654,9 @@ def main() -> None:
             fn()
     wl_sections: dict = {}
     if args.workload:
-        wl_sections = workload_bench(args.workload)
+        for preset in args.workload.split(","):
+            wl_sections.update(workload_bench(preset.strip(),
+                                              args.maintenance))
     if args.pr2_json:
         bench_pr2(args.pr2_json, extra_sections=wl_sections)
     if args.json:

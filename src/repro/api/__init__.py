@@ -12,6 +12,7 @@ from .config import ENGINES, IndexConfig, manual_merge_policy
 from .engines import (ENGINE_CLASSES, Engine, LocalEngine, PallasEngine,
                       ShardedEngine)
 from .index import LearnedIndex
+from ..maintain import MaintenanceConfig
 from ..online.merge import MergePolicy
 
 __all__ = [
@@ -22,6 +23,7 @@ __all__ = [
     "IndexConfig",
     "LearnedIndex",
     "LocalEngine",
+    "MaintenanceConfig",
     "MergePolicy",
     "PallasEngine",
     "ShardedEngine",

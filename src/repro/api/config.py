@@ -15,6 +15,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from ..maintain import MaintenanceConfig
 from ..online.merge import MergePolicy
 
 ENGINES = ("local", "pallas", "sharded")
@@ -41,6 +42,11 @@ class IndexConfig:
                         compiled search executable.
     merge             : `repro.online.MergePolicy` deciding when pending
                         writes fold through the host tree (Alg. 7/8).
+    maintenance       : `repro.maintain.MaintenanceConfig` switching the
+                        merge to the adaptive pipeline — incremental
+                        splice-flatten, drift-triggered subtree retrains,
+                        and (local engine only) background merges.  None =
+                        legacy monolithic full-flatten merges.
     overlay_cap       : initial tombstone-overlay capacity (doubles).
     sample_stride     : bulk-load sampling stride (Alg. 4, Table 13).
     bulk_kw           : extra `core.dili.bulk_load` kwargs (cost model,
@@ -67,6 +73,7 @@ class IndexConfig:
     dtype: Any = None
     pad: bool = True
     merge: MergePolicy = field(default_factory=MergePolicy)
+    maintenance: MaintenanceConfig | None = None
     overlay_cap: int = 4096
     sample_stride: int = 1
     bulk_kw: tuple = ()                      # (("lam", 4.0), ...) — hashable
@@ -109,7 +116,10 @@ class IndexConfig:
             merge=dict(max_fill=self.merge.max_fill,
                        max_writes=self.merge.max_writes,
                        pressure_lambda=self.merge.pressure_lambda,
-                       pressure_check_every=self.merge.pressure_check_every),
+                       pressure_check_every=self.merge.pressure_check_every,
+                       pressure_min_pending=self.merge.pressure_min_pending),
+            maintenance=(None if self.maintenance is None
+                         else self.maintenance.to_json_dict()),
             overlay_cap=self.overlay_cap,
             sample_stride=self.sample_stride,
             bulk_kw=list(list(kv) for kv in self.bulk_kw),
@@ -126,7 +136,10 @@ class IndexConfig:
     def from_json_dict(cls, d: dict) -> "IndexConfig":
         d = dict(d)
         merge = MergePolicy(**d.pop("merge"))
+        maint = d.pop("maintenance", None)
+        if maint is not None:
+            maint = MaintenanceConfig.from_json_dict(maint)
         dtype = d.pop("dtype")
         bulk_kw = tuple(tuple(kv) for kv in d.pop("bulk_kw", []))
-        return cls(merge=merge, bulk_kw=bulk_kw,
+        return cls(merge=merge, maintenance=maint, bulk_kw=bulk_kw,
                    dtype=None if dtype is None else np.dtype(dtype), **d)

@@ -24,6 +24,7 @@ then the (small, sorted) overlay window is merged host-side per query.
 
 from __future__ import annotations
 
+import time
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -37,6 +38,8 @@ from ..core.distributed import (build_sharded, combined_overlay_arrays,
                                 sharded_merge, sharded_range_query,
                                 sharded_upsert, shard_of, to_mesh)
 from ..core.flat import flatten, merge_sorted_runs
+from ..maintain import (IncrementalFlattener, LeafAccounting,
+                        fold_with_accounting, run_retrains)
 from ..online.merge import OnlineIndex, adjust_pressure
 from ..online.overlay import (TombstoneOverlay, fold_overlay,
                               overlay_device_arrays)
@@ -77,6 +80,16 @@ class Engine(Protocol):
 
     def stats(self) -> dict: ...
 
+    def close(self) -> None:
+        """Release engine resources (e.g. the background maintenance
+        worker); pending writes stay readable.  Idempotent."""
+        ...
+
+    def maint_timings(self) -> list[dict]:
+        """Per-merge wall times: merge_s (fold+retrain+flatten),
+        publish_s (upload+flip), incremental, dirty_frac."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # shared overlay-exact helpers
@@ -112,6 +125,26 @@ def _overlay_summary(overlays) -> dict:
                 overlay_cap=sum(ov.cap for ov in ovs),
                 overlay_fill=max((ov.full_fraction for ov in ovs),
                                  default=0.0))
+
+
+def _maint_summary(*, n_full: int, n_incremental: int, n_retrains: int,
+                   dirty_row_fraction: float, queue_depth: int = 0,
+                   errors: int = 0) -> dict:
+    """The engine-independent maintenance slice of `stats()` (pinned by
+    tests/test_api_engines.py): flatten kind counts, subtree retrains, the
+    last merge's dirty-row fraction, and the background queue depth (0 on
+    engines without a scheduler)."""
+    return dict(n_full_flattens=n_full, n_incremental_flattens=n_incremental,
+                n_retrains=n_retrains, dirty_row_fraction=dirty_row_fraction,
+                maint_queue_depth=queue_depth, maint_errors=errors)
+
+
+def _reject_background(cfg: IndexConfig, engine: str) -> None:
+    if cfg.maintenance is not None and cfg.maintenance.background:
+        raise ValueError(
+            f"background maintenance requires the local engine (its "
+            f"double-buffered SnapshotStore); the {engine} engine "
+            f"supports maintenance=MaintenanceConfig(background=False)")
 
 
 def _merge_range_windows(ks, vs, cnt, lo, hi, ov_k, ov_v, ov_t,
@@ -221,6 +254,7 @@ class LocalEngine:
                               overlay_cap=cfg.overlay_cap,
                               dtype=cfg.resolved_dtype, pad=cfg.pad,
                               early_exit=cfg.early_exit,
+                              maintenance=cfg.maintenance,
                               **cfg.bulk_load_kw())
 
     # -- reads --------------------------------------------------------------
@@ -230,8 +264,10 @@ class LocalEngine:
 
     def range(self, lo, hi, max_hits):
         dt = self.oi.store.dtype
+        # pending entries captured BEFORE the snapshot is read inside the
+        # lambda: exact across a concurrent background publish
         return _overlay_exact_range(
-            self.oi.overlay.entries(), lo, hi, max_hits,
+            self.oi.pending_entries(), lo, hi, max_hits,
             lambda lo_, hi_, fetch: S.range_query_batch(
                 self.oi.store.idx, jnp.asarray(lo_, dt),
                 jnp.asarray(hi_, dt), max_hits=fetch))
@@ -256,11 +292,15 @@ class LocalEngine:
     def flush(self):
         self.oi.flush()
 
+    def close(self):
+        self.oi.close()
+
     # -- introspection ------------------------------------------------------
 
     def items(self):
+        # pending entries BEFORE the flat (exact across a background flip)
+        ok, ovv, ott = self.oi.pending_entries()
         f = self.oi.store.flat
-        ok, ovv, ott = self.oi.overlay.entries()
         return _merged_items(f.pair_key, f.pair_val, ok, ovv, ott)
 
     @property
@@ -279,14 +319,38 @@ class LocalEngine:
     def n_merges(self) -> int:
         return self.oi.n_merges
 
+    def maint_timings(self) -> list[dict]:
+        """Per-epoch merge/publish wall times (skipping the build epoch) —
+        the source of the benchmark latency percentiles."""
+        return [dict(merge_s=st.merge_s, publish_s=st.publish_s,
+                     incremental=st.incremental, dirty_frac=st.dirty_frac)
+                for st in self.oi.store.history[1:]]
+
     def stats(self) -> dict:
         snap = self.oi.store.idx
-        return dict(engine=self.name, epoch=self.oi.epoch,
+        oi = self.oi
+        pend = oi._merging
+        # during an in-flight background merge, summarize the DEDUPED view
+        # (a key rewritten after the freeze lives in both overlays but is
+        # one distinct pending key — _overlay_summary's contract)
+        overlays = ([oi.overlay] if pend is None
+                    else [pend.merged_with(oi.overlay)])
+        sched = oi.scheduler
+        return dict(engine=self.name, epoch=oi.epoch,
                     max_depth=snap.max_depth,
-                    snapshot_keys=int(self.oi.store.flat.n_pairs),
-                    **_overlay_summary([self.oi.overlay]),
+                    snapshot_keys=int(oi.store.flat.n_pairs),
+                    **_overlay_summary(overlays),
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
-                    merge_reasons=dict(self.oi.merge_reasons),
+                    merge_reasons=dict(oi.merge_reasons),
+                    **_maint_summary(
+                        n_full=oi.n_full_flattens,
+                        n_incremental=oi.n_incremental_flattens,
+                        n_retrains=oi.n_retrains,
+                        dirty_row_fraction=oi.last_dirty_frac,
+                        queue_depth=0 if sched is None else sched.depth,
+                        errors=0 if sched is None else len(sched.errors)),
+                    maint_error_logs=([] if sched is None
+                                      else list(sched.errors)),
                     device_bytes=snap.nbytes)
 
 
@@ -308,6 +372,12 @@ class PallasEngine:
         from ..kernels import ops as K
         self._K = K
         self.cfg = cfg
+        _reject_background(cfg, self.name)
+        m = cfg.maintenance
+        self.flattener = (IncrementalFlattener()
+                          if m is not None and m.incremental else None)
+        self.accounting = (LeafAccounting(m)
+                           if m is not None and m.retrain else None)
         k32, v64 = self._quantize(keys, vals)
         with placement_dtype(np.float32):
             self.dili = bulk_load(k32, v64, **cfg.bulk_load_kw())
@@ -315,7 +385,12 @@ class PallasEngine:
         self._ov_mirror = None          # device overlay, rebuilt on write
         self.epoch = 0
         self.n_flattens = 0
+        self.n_full_flattens = 0
+        self.n_incremental_flattens = 0
         self.n_merges = 0
+        self.n_retrains = 0
+        self.last_dirty_frac = 1.0
+        self._timings: list[dict] = []
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
         self._publish()
@@ -348,12 +423,34 @@ class PallasEngine:
             return self.cfg.interpret
         return jax.default_backend() != "tpu"
 
-    def _publish(self):
-        self.flat = flatten(self.dili)
+    def _publish(self, merge_s: float = 0.0):
+        t0 = time.perf_counter()
+        if self.flattener is not None:
+            self.flat = self.flattener.flatten(self.dili,
+                                               self.dili.take_dirty())
+            incremental = self.flattener.last_incremental
+            self.last_dirty_frac = (self.flattener.last_dirty_rows
+                                    / max(self.flattener.last_total_rows, 1))
+        else:
+            self.flat = flatten(self.dili)
+            self.dili.take_dirty()     # drain (unbounded growth otherwise)
+            incremental = False
+            self.last_dirty_frac = 1.0
+        merge_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
         self.arrs = self._K.kernel_arrays(self.flat)
         self.snap = DeviceSnapshot.from_flat(self.flat, dtype=jnp.float32,
                                              pad=self.cfg.pad)
+        jax.block_until_ready(self.snap.arrays)
         self.n_flattens += 1
+        if incremental:
+            self.n_incremental_flattens += 1
+        else:
+            self.n_full_flattens += 1
+        self._timings.append(dict(merge_s=merge_s,
+                                  publish_s=time.perf_counter() - t0,
+                                  incremental=incremental,
+                                  dirty_frac=self.last_dirty_frac))
         self.epoch += 1
 
     # -- reads --------------------------------------------------------------
@@ -420,7 +517,8 @@ class PallasEngine:
         if not trigger and self._writes_since_pressure >= p.pressure_check_every:
             self._writes_since_pressure = 0
             with placement_dtype(np.float32):   # leaf walk predicts in f32
-                trigger = (adjust_pressure(self.dili, self.overlay)
+                trigger = (adjust_pressure(self.dili, self.overlay,
+                                           p.pressure_min_pending)
                            > p.pressure_lambda)
         if trigger:
             self.flush()
@@ -428,14 +526,22 @@ class PallasEngine:
     def flush(self):
         if self.overlay.count == 0:
             return
+        t0 = time.perf_counter()
+        # the host walk (and any retrain's bulk_load) must place slots in
+        # the same f32 arithmetic the kernel searches with
         with placement_dtype(np.float32):
-            fold_overlay(self.dili, self.overlay)
+            if self.accounting is not None:
+                fold_with_accounting(self.dili, self.overlay,
+                                     self.accounting)
+                self.n_retrains += run_retrains(self.dili, self.accounting)
+            else:
+                fold_overlay(self.dili, self.overlay)
         self.overlay = TombstoneOverlay.empty(self.cfg.overlay_cap)
         self._ov_mirror = None
         self.n_merges += 1
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
-        self._publish()
+        self._publish(merge_s=time.perf_counter() - t0)
 
     # -- introspection ------------------------------------------------------
 
@@ -452,12 +558,23 @@ class PallasEngine:
     def snapshot(self):
         return self.snap
 
+    def close(self):
+        pass
+
+    def maint_timings(self) -> list[dict]:
+        return self._timings[1:]        # skip the build publish
+
     def stats(self) -> dict:
         return dict(engine=self.name, epoch=self.epoch,
                     max_depth=self.flat.max_depth,
                     snapshot_keys=int(self.flat.n_pairs),
                     **_overlay_summary([self.overlay]),
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    **_maint_summary(
+                        n_full=self.n_full_flattens,
+                        n_incremental=self.n_incremental_flattens,
+                        n_retrains=self.n_retrains,
+                        dirty_row_fraction=self.last_dirty_frac),
                     table_bytes=self._K.table_bytes(self.arrs),
                     kernel_eligible=(self._K.table_bytes(self.arrs)
                                      <= self.cfg.vmem_budget_bytes),
@@ -480,6 +597,7 @@ class ShardedEngine:
 
     def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
         self.cfg = cfg
+        _reject_background(cfg, self.name)
         n = cfg.n_shards or len(jax.devices())
         # every shard's bulk_load needs >= 2 keys, and the mesh cannot span
         # more devices than exist; a tiny index (e.g. a freshly warmed
@@ -490,9 +608,19 @@ class ShardedEngine:
                                 overlay_cap=cfg.overlay_cap, keep_host=True,
                                 **cfg.bulk_load_kw())
         self.mesh = jax.make_mesh((n,), (cfg.mesh_axis,))
+        m = cfg.maintenance
+        self._flatteners = ([IncrementalFlattener() for _ in range(n)]
+                            if m is not None and m.incremental else None)
+        self._accounting = ([LeafAccounting(m) for _ in range(n)]
+                            if m is not None and m.retrain else None)
         self.n_flattens = n                      # build flattened every shard
+        self.n_full_flattens = n
+        self.n_incremental_flattens = 0
         self.n_merges = 0
+        self.n_retrains = 0
+        self.last_dirty_frac = 1.0
         self.n_publishes = 1
+        self._timings: list[dict] = []
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
         self.arrs = to_mesh(self.sd, self.mesh, axis=cfg.mesh_axis,
@@ -584,24 +712,61 @@ class ShardedEngine:
         if not trigger and self._writes_since_pressure >= p.pressure_check_every:
             self._writes_since_pressure = 0
             trigger = any(
-                ov.count and (adjust_pressure(d, ov) > p.pressure_lambda)
+                ov.count and (adjust_pressure(d, ov, p.pressure_min_pending)
+                              > p.pressure_lambda)
                 for d, ov in zip(self.sd.dilis, self.sd.overlays))
         if trigger:
             self.flush()
+
+    def _fold_shard(self, r: int, dili, ov) -> None:
+        acct = self._accounting[r]
+        fold_with_accounting(dili, ov, acct)
+        self.n_retrains += run_retrains(dili, acct)
+
+    def _flatten_shard(self, r: int, dili):
+        fl = self._flatteners[r]
+        flat = fl.flatten(dili, dili.take_dirty())
+        if fl.last_incremental:
+            self.n_incremental_flattens += 1
+        else:
+            self.n_full_flattens += 1
+        return flat
 
     def flush(self):
         """Fold every shard with pending writes and republish the mesh
         copy.  (A policy trigger folds all pending shards too — the merge
         itself is still per-shard row rewrites, no global rebuild.)"""
-        merged = sharded_merge(self.sd, max_fill=0.0)
+        t0 = time.perf_counter()
+        merged = sharded_merge(
+            self.sd, max_fill=0.0,
+            fold_fn=self._fold_shard if self._accounting else None,
+            flatten_fn=self._flatten_shard if self._flatteners else None)
         if merged:
+            incremental = False
+            if self._flatteners is None:
+                self.n_full_flattens += len(merged)
+            else:
+                fls = [self._flatteners[r] for r in merged]
+                self.last_dirty_frac = (
+                    sum(f.last_dirty_rows for f in fls)
+                    / max(sum(f.last_total_rows for f in fls), 1))
+                # honest labeling: a flush is incremental only if every
+                # merged shard actually spliced (cold caches full-flatten)
+                incremental = all(f.last_incremental for f in fls)
+            merge_s = time.perf_counter() - t0
             self.n_merges += 1
             self.n_flattens += len(merged)
             self._writes_since_publish = 0
             self._writes_since_pressure = 0
+            t0 = time.perf_counter()
             self.arrs = to_mesh(self.sd, self.mesh, axis=self.cfg.mesh_axis,
                                 dtype=self.cfg.resolved_dtype)
+            jax.block_until_ready(list(self.arrs.values()))
             self.n_publishes += 1
+            self._timings.append(dict(
+                merge_s=merge_s, publish_s=time.perf_counter() - t0,
+                incremental=incremental,
+                dirty_frac=self.last_dirty_frac))
 
     # -- introspection ------------------------------------------------------
 
@@ -623,6 +788,12 @@ class ShardedEngine:
         # flush bumps it); `sd.epoch` (merge count) stays internal
         return self.n_publishes
 
+    def close(self):
+        pass
+
+    def maint_timings(self) -> list[dict]:
+        return list(self._timings)
+
     def stats(self) -> dict:
         return dict(engine=self.name, epoch=self.epoch,
                     max_depth=self.sd.max_depth,
@@ -631,6 +802,11 @@ class ShardedEngine:
                     **_overlay_summary(self.sd.overlays),
                     per_shard_pending=[ov.count for ov in self.sd.overlays],
                     n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    **_maint_summary(
+                        n_full=self.n_full_flattens,
+                        n_incremental=self.n_incremental_flattens,
+                        n_retrains=self.n_retrains,
+                        dirty_row_fraction=self.last_dirty_frac),
                     n_publishes=self.n_publishes,
                     device_bytes=sum(int(np.prod(v.shape)) * v.dtype.itemsize
                                      for v in self.arrs.values()))

@@ -124,9 +124,24 @@ class LearnedIndex:
 
     def flush(self) -> dict:
         """Fold every pending write through the host tree and republish;
-        returns `stats()` afterwards."""
+        returns `stats()` afterwards.  With background maintenance this is
+        the synchronous barrier (drains the worker first)."""
         self._engine.flush()
         return self.stats()
+
+    def close(self) -> None:
+        """Release engine resources (stops the background maintenance
+        worker when one is running).  Pending writes stay readable but are
+        no longer folded; idempotent."""
+        close = getattr(self._engine, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "LearnedIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- introspection -------------------------------------------------------
 
@@ -136,6 +151,11 @@ class LearnedIndex:
 
     def stats(self) -> dict:
         return self._engine.stats()
+
+    def maint_timings(self) -> list[dict]:
+        """Per-merge wall times (merge_s fold+retrain+flatten, publish_s
+        upload+flip, incremental, dirty_frac) — benchmark material."""
+        return self._engine.maint_timings()
 
     @property
     def engine(self) -> str:

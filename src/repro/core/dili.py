@@ -260,9 +260,14 @@ class DILI:
     eta: float = ETA
     lam: float = LAMBDA
     local_optimized: bool = True
+    sample_stride: int = 1     # retained so subtree rebuilds match the build
     # statistics
     n_conflicts: int = 0
     n_adjustments: int = 0
+    # ids of leaves located by mutation entry points since the last
+    # `take_dirty()` — the dirty plumbing of the incremental flattener
+    # (repro.maintain.flattener); cheap enough to keep always-on
+    dirty_ids: set = field(default_factory=set, repr=False)
 
     # -- search ------------------------------------------------------------
 
@@ -321,9 +326,15 @@ class DILI:
 
     # -- updates -------------------------------------------------------------
 
+    def take_dirty(self) -> set:
+        """Drain the dirty-leaf id set (mutations since the last call)."""
+        d, self.dirty_ids = self.dirty_ids, set()
+        return d
+
     def insert(self, key: float, val: int) -> bool:
         """Algorithm 7. Returns True if the key was newly inserted."""
         leaf, _ = self.locate_leaf(key)
+        self.dirty_ids.add(id(leaf))
         return self._insert_to_leaf(leaf, key, val)
 
     def _insert_to_leaf(self, leaf: Leaf, key: float, val: int) -> bool:
@@ -379,6 +390,12 @@ class DILI:
 
     def _set_payload(self, x: float, val: int) -> bool:
         node, _ = self.locate_leaf(x)
+        self.dirty_ids.add(id(node))
+        return self._set_payload_at(node, x, val)
+
+    def _set_payload_at(self, node: Leaf, x: float, val: int) -> bool:
+        """Replace x's payload within an already-located leaf subtree
+        (callers that located the leaf themselves skip the second walk)."""
         while True:
             if node.dense:
                 for i, s in enumerate(node.slots[: node.omega]):
@@ -412,6 +429,7 @@ class DILI:
     def delete(self, key: float) -> bool:
         """Algorithm 8. Returns True if the key existed."""
         leaf, _ = self.locate_leaf(key)
+        self.dirty_ids.add(id(leaf))
         return self._delete_from_leaf(leaf, key)
 
     def _delete_from_leaf(self, leaf: Leaf, key: float) -> bool:
@@ -618,7 +636,8 @@ def bulk_load(keys: np.ndarray, vals: np.ndarray | None = None,
     root_ub = float(bu.root.ub)
 
     dili = DILI(root=None, n_keys=n, cm=cm, eta=eta, lam=lam,  # type: ignore
-                local_optimized=local_optimized)
+                local_optimized=local_optimized,
+                sample_stride=sample_stride)
 
     def create_leaf(lb: float, ub: float, lo: int, hi: int) -> Leaf:
         pd = [(float(keys[i]), int(vals[i])) for i in range(lo, hi)]
@@ -669,6 +688,66 @@ def bulk_load(keys: np.ndarray, vals: np.ndarray | None = None,
     else:
         dili.root = create_internal(root_lb, root_ub, height - 1, 0, n)
     return dili
+
+
+def rebuild_subtree(dili: DILI, leaf: Leaf) -> Node | None:
+    """Local retrain: re-run the paper's top-down fanout individualization
+    (Alg. 4/5) on ONE leaf subtree and splice the result back in place.
+
+    Alg. 7's per-leaf adjustment re-spreads a region with `phi(alpha)`
+    growth, but under sustained drift the repeated local fixes degrade the
+    region globally (deep conflict chains, sparse slots).  Rebuilding the
+    subtree from its live pairs — exactly the bulk-loading machinery, over
+    just this key range — restores the build-time layout quality without
+    touching the rest of the tree.  Returns the new subtree root (possibly
+    an `Internal` — callers route through it transparently), or None when
+    the leaf holds too few pairs to be worth rebuilding or can no longer
+    be located from the root (already replaced).
+
+    The replacement preserves the leaf's routing region bounds (widened to
+    cover any out-of-region keys the parent's clipping routed here), keeps
+    `dili.n_keys` unchanged, and marks nothing: the caller's flattener
+    sees a new object where the old leaf was — a cache miss, hence dirty
+    by identity.
+    """
+    pairs = collect_pairs(leaf)
+    if len(pairs) < 2:
+        return None
+    # find the splice point FIRST — if the leaf is no longer reachable
+    # (already replaced), bail before paying the bulk_load (and before
+    # polluting n_conflicts with a rebuild that never lands).  The walk
+    # follows a key the leaf owns: pairs live where the static routing
+    # puts them, so this reaches the leaf when it is still in the tree.
+    rep = float(pairs[len(pairs) // 2][0])
+    parent: Internal | None = None
+    child_i = -1
+    if dili.root is not leaf:
+        cur: Node = dili.root
+        while isinstance(cur, Internal):
+            i = cur.child_index(rep)
+            child = cur.children[i]
+            if child is leaf:
+                parent, child_i = cur, i
+                break
+            cur = child
+        if parent is None:
+            return None
+
+    keys = np.array([p[0] for p in pairs], np.float64)
+    vals = np.array([p[1] for p in pairs], np.int64)
+    sub = bulk_load(keys, vals, cm=dili.cm, eta=dili.eta, lam=dili.lam,
+                    local_optimized=dili.local_optimized,
+                    sample_stride=dili.sample_stride)
+    node = sub.root
+    node.lb = min(float(leaf.lb), float(keys[0]))
+    node.ub = max(float(leaf.ub), float(keys[-1]))
+    dili.n_conflicts += sub.n_conflicts
+
+    if parent is None:
+        dili.root = node
+    else:
+        parent.children[child_i] = node
+    return node
 
 
 def _count_conflicts_estimate(leaf: Leaf, pd: list, eta: float) -> int:

@@ -374,12 +374,18 @@ def sharded_delete(sd: ShardedDILI, keys) -> None:
     sd._ov_cache.clear()
 
 
-def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0) -> list[int]:
+def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0,
+                  fold_fn=None, flatten_fn=None) -> list[int]:
     """Fold each shard whose overlay full_fraction exceeds `max_fill` through
     its host DILI (Alg. 7/8), re-flatten ONLY those shards, and rewrite their
     rows of the stacked tables in place.  The stack is re-padded (bigger pow2)
     only when a merged shard outgrows the shared shape.  Returns merged shard
     ids; bumps `sd.epoch` when any merged.
+
+    `fold_fn(r, dili, overlay)` / `flatten_fn(r, dili) -> FlatDILI` override
+    the per-shard fold and flatten — the maintenance hooks the sharded
+    engine uses to route through accounting/retrains and the incremental
+    flattener (defaults: plain `fold_overlay` / full `flatten`).
 
     NOTE: only the HOST stack (`sd.idx`) is rewritten, and the merged
     overlays are cleared — device copies from a prior `to_mesh()` no longer
@@ -387,12 +393,21 @@ def sharded_merge(sd: ShardedDILI, max_fill: float = 0.0) -> list[int]:
     before serving lookups whenever this returns a non-empty list."""
     from ..online.overlay import TombstoneOverlay, fold_overlay
     _require_host(sd)
+    if fold_fn is None:
+        fold_fn = lambda r, d, ov: fold_overlay(d, ov)   # noqa: E731
+    if flatten_fn is None:
+        # drain the dirty-id set a full flatten supersedes (it would
+        # otherwise grow for the lifetime of a maintenance-less shard)
+        def flatten_fn(r, d):
+            f = flatten(d)
+            d.take_dirty()
+            return f
     merged: list[int] = []
     for r, ov in enumerate(sd.overlays):
         if ov.count == 0 or ov.full_fraction < max_fill:
             continue
-        fold_overlay(sd.dilis[r], ov)
-        sd.flats[r] = flatten(sd.dilis[r])
+        fold_fn(r, sd.dilis[r], ov)
+        sd.flats[r] = flatten_fn(r, sd.dilis[r])
         sd.overlays[r] = TombstoneOverlay.empty(ov.cap)
         merged.append(r)
     if not merged:

@@ -1,0 +1,23 @@
+"""Adaptive maintenance subsystem (DESIGN.md section 12).
+
+Converts merge cost from O(n) to O(dirty): per-leaf accounting decides
+WHAT degraded (write counts, tombstone density, a KS drift statistic),
+the incremental flattener re-materializes ONLY the dirty subtrees
+bit-identically to a full `flatten()`, local retrains re-run the paper's
+top-down fanout individualization on drifted regions, and the
+`MaintenanceScheduler` runs the whole merge pipeline on a background
+thread against the double-buffered `SnapshotStore`.
+"""
+
+from .accounting import (LeafAccount, LeafAccounting, fold_with_accounting,
+                         ks_uniform, leaf_drift, run_retrains)
+from .config import MaintenanceConfig
+from .flattener import IncrementalFlattener, SegmentBlock, flatten_segment
+from .scheduler import MaintenanceScheduler
+
+__all__ = [
+    "IncrementalFlattener", "LeafAccount", "LeafAccounting",
+    "MaintenanceConfig", "MaintenanceScheduler", "SegmentBlock",
+    "flatten_segment", "fold_with_accounting", "ks_uniform", "leaf_drift",
+    "run_retrains",
+]

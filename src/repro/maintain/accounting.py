@@ -1,0 +1,146 @@
+"""Per-leaf maintenance accounting: write counts, tombstone density, and a
+drift statistic comparing recent key arrivals against the leaf's
+build-time distribution.
+
+The drift statistic needs no stored histogram: the leaf's linear model IS
+its build-time distribution summary (least squares maps the build keys
+roughly uniformly over the slot range).  Mapping recent arrival keys
+through the model, `u = clip((a + b*k) / fo, 0, 1)`, a leaf still serving
+its build distribution sees `u ~ uniform[0, 1]`; a drifted region piles
+arrivals into a narrow slot band.  The Kolmogorov-Smirnov distance between
+the arrival `u`s and uniform is the drift score — the same multicriteria
+"has the model's error budget moved" view the PGM-index takes, localized
+to DILI's equal-division subtrees.
+
+`LeafAccounting.plan()` turns the accounts into a retrain list: leaves
+whose drift crossed `drift_threshold` (with at least `retrain_min_writes`
+arrivals) or whose tombstone density crossed `tombstone_trigger`.
+`fold_with_accounting` is the drop-in replacement for
+`online.overlay.fold_overlay` that feeds the accounts while folding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.dili import DILI, Leaf, rebuild_subtree
+from .config import MaintenanceConfig
+
+
+@dataclass
+class LeafAccount:
+    leaf: Leaf                  # strong ref: keeps the account's id stable
+    writes: int = 0
+    deletes: int = 0
+    arrivals: list = field(default_factory=list)   # recent upsert keys
+
+    def note(self, key: float, tomb: bool, window: int) -> None:
+        self.writes += 1
+        if tomb:
+            self.deletes += 1
+        else:
+            self.arrivals.append(key)
+            if len(self.arrivals) > window:
+                del self.arrivals[: len(self.arrivals) - window]
+
+
+def ks_uniform(u: np.ndarray) -> float:
+    """Kolmogorov-Smirnov distance of samples `u` (in [0, 1]) vs uniform."""
+    n = len(u)
+    if n == 0:
+        return 0.0
+    u = np.sort(u)
+    grid = np.arange(1, n + 1) / n
+    return float(np.maximum(grid - u, u - (grid - 1 / n)).max())
+
+
+def leaf_drift(leaf: Leaf, arrivals) -> float:
+    """KS distance of arrival keys mapped through the leaf's model."""
+    if len(arrivals) == 0 or leaf.fo <= 1:
+        return 0.0
+    k = np.asarray(arrivals, np.float64)
+    u = np.clip((leaf.a + leaf.b * k) / leaf.fo, 0.0, 1.0)
+    return ks_uniform(u)
+
+
+class LeafAccounting:
+    """Account book for one host DILI (or one shard's)."""
+
+    def __init__(self, cfg: MaintenanceConfig):
+        self.cfg = cfg
+        self._accounts: dict[int, LeafAccount] = {}
+        self._touched: set[int] = set()          # since the last plan()
+
+    def __len__(self) -> int:
+        return len(self._accounts)
+
+    def note(self, leaf: Leaf, key: float, tomb: bool) -> None:
+        lid = id(leaf)
+        acct = self._accounts.get(lid)
+        if acct is None or acct.leaf is not leaf:
+            acct = self._accounts[lid] = LeafAccount(leaf)
+        acct.note(key, tomb, self.cfg.arrival_window)
+        self._touched.add(lid)
+
+    # -- decisions -----------------------------------------------------------
+
+    def tombstone_density(self, acct: LeafAccount) -> float:
+        return acct.deletes / max(acct.leaf.omega + acct.deletes, 1)
+
+    def should_retrain(self, acct: LeafAccount) -> bool:
+        cfg = self.cfg
+        if acct.leaf.omega < 2:
+            return False
+        if (acct.deletes >= cfg.retrain_min_writes
+                and self.tombstone_density(acct) > cfg.tombstone_trigger):
+            return True
+        return (acct.writes >= cfg.retrain_min_writes
+                and leaf_drift(acct.leaf, acct.arrivals)
+                > cfg.drift_threshold)
+
+    def plan(self) -> list[Leaf]:
+        """Leaves (touched since the last plan) due for a retrain."""
+        due = [self._accounts[lid] for lid in self._touched
+               if lid in self._accounts]
+        self._touched.clear()
+        return [a.leaf for a in due if self.should_retrain(a)]
+
+    def forget(self, leaf: Leaf) -> None:
+        """Drop a retrained leaf's account (its region restarts clean)."""
+        self._accounts.pop(id(leaf), None)
+
+
+def fold_with_accounting(dili: DILI, ov,
+                         accounting: LeafAccounting | None) -> None:
+    """`fold_overlay` plus per-write accounting: tombstones via Algorithm 8,
+    live entries via Algorithm 7, each noted against the top-level leaf the
+    write lands in (the incremental flattener's segment unit).
+
+    One tree walk per entry: the leaf is located once and the Alg. 7/8
+    bodies are driven with it directly — `dili.upsert`/`delete` would
+    re-locate the same leaf, doubling the host-walk cost on the merge
+    path this subsystem exists to shrink.  The dirty marking the public
+    entry points perform happens here instead."""
+    keys, vals, tomb = ov.entries()
+    for k, v, t in zip(keys, vals, tomb):
+        k = float(k)
+        leaf, _ = dili.locate_leaf(k)
+        dili.dirty_ids.add(id(leaf))
+        if accounting is not None:
+            accounting.note(leaf, k, bool(t))
+        if t:
+            dili._delete_from_leaf(leaf, k)
+        elif not dili._insert_to_leaf(leaf, k, int(v)):
+            dili._set_payload_at(leaf, k, int(v))   # update in place
+
+
+def run_retrains(dili: DILI, accounting: LeafAccounting) -> int:
+    """Rebuild every leaf the accounting flagged; returns the count."""
+    n = 0
+    for leaf in accounting.plan():
+        if rebuild_subtree(dili, leaf) is not None:
+            accounting.forget(leaf)
+            n += 1
+    return n

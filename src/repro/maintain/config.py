@@ -1,0 +1,65 @@
+"""`MaintenanceConfig`: the knob set of the adaptive maintenance subsystem.
+
+One frozen dataclass shared by every engine (threaded through
+`api.IndexConfig.maintenance`) and by `OnlineIndex` directly.  `None`
+anywhere a `MaintenanceConfig` is accepted means the legacy monolithic
+path: full `flatten()` per merge, no drift accounting, no retrains, no
+background thread.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MaintenanceConfig:
+    """Adaptive maintenance knobs (DESIGN.md section 12).
+
+    incremental       : splice-flatten — re-flatten only the subtrees the
+                        merge dirtied and reassemble from cached segment
+                        blocks; bit-identical to a full `flatten()`.
+    retrain           : drift/tombstone-triggered subtree rebuilds — re-run
+                        the paper's top-down fanout individualization
+                        (Alg. 4/5) on degraded regions instead of letting
+                        Alg. 7's per-leaf adjustment degrade globally.
+    drift_threshold   : KS distance between recent arrival keys (mapped
+                        through the leaf's own model) and the uniform slot
+                        fill the model was fit to; above it the leaf's
+                        region no longer looks like its build distribution.
+    retrain_min_writes: per-leaf write floor before drift is trusted (a KS
+                        statistic over a handful of arrivals is noise).
+    tombstone_trigger : deletes / (live + deletes) density per leaf above
+                        which the region is rebuilt to compact it.
+    arrival_window    : per-leaf ring-buffer size of recent arrival keys
+                        the drift statistic is computed over.
+    background        : run merges + retrains on a `MaintenanceScheduler`
+                        worker thread against the double-buffered
+                        `SnapshotStore` (local engine only) so the writer
+                        never blocks on a publish.
+    max_queue         : background task-queue bound; triggers that find the
+                        queue full coalesce into the next merge.
+    """
+
+    incremental: bool = True
+    retrain: bool = True
+    drift_threshold: float = 0.35
+    retrain_min_writes: int = 96
+    tombstone_trigger: float = 0.25
+    arrival_window: int = 128
+    background: bool = False
+    max_queue: int = 4
+
+    # -- (de)serialization for api.IndexConfig round-trips -------------------
+
+    def to_json_dict(self) -> dict:
+        return dict(incremental=self.incremental, retrain=self.retrain,
+                    drift_threshold=self.drift_threshold,
+                    retrain_min_writes=self.retrain_min_writes,
+                    tombstone_trigger=self.tombstone_trigger,
+                    arrival_window=self.arrival_window,
+                    background=self.background, max_queue=self.max_queue)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "MaintenanceConfig":
+        return cls(**d)

@@ -14,9 +14,11 @@ from .overlay import (LIVE, TOMBSTONE, TombstoneOverlay, fold_overlay,
                       overlay_device_arrays, search_with_updates)
 from .epoch import EpochStats, SnapshotStore
 from .merge import MergePolicy, OnlineIndex, adjust_pressure
+from ..maintain import MaintenanceConfig
 
 __all__ = [
     "LIVE", "TOMBSTONE", "TombstoneOverlay", "fold_overlay",
     "overlay_device_arrays", "search_with_updates", "EpochStats",
     "SnapshotStore", "MergePolicy", "OnlineIndex", "adjust_pressure",
+    "MaintenanceConfig",
 ]

@@ -38,6 +38,12 @@ class EpochStats:
     merge_lag: int           # writes absorbed since the previous publish
     publish_s: float         # wall time: upload + block_until_ready
     retraced: bool           # padded shapes changed vs previous epoch
+    # maintenance observability (DESIGN.md section 12); defaults describe a
+    # legacy monolithic merge
+    merge_s: float = 0.0     # wall time: fold + retrain + flatten
+    incremental: bool = False  # splice-flatten (vs full flatten())
+    dirty_frac: float = 1.0  # slot rows re-materialized / total rows
+    n_retrains: int = 0      # subtree rebuilds during this merge
 
 
 @dataclass
@@ -72,7 +78,9 @@ class SnapshotStore:
     # -- write side ----------------------------------------------------------
 
     def publish(self, flat: FlatDILI, *, overlay_fill: float = 0.0,
-                merge_lag: int = 0) -> EpochStats:
+                merge_lag: int = 0, merge_s: float = 0.0,
+                incremental: bool = False, dirty_frac: float = 1.0,
+                n_retrains: int = 0) -> EpochStats:
         """Upload `flat` into the back buffer, flip, bump the epoch."""
         from ..api.snapshot import DeviceSnapshot   # lazy: api imports online
 
@@ -94,6 +102,8 @@ class SnapshotStore:
             n_nodes=flat.n_nodes, n_slots=flat.n_slots,
             bytes_uploaded=snap.nbytes,
             overlay_fill=overlay_fill, merge_lag=merge_lag,
-            publish_s=publish_s, retraced=retraced)
+            publish_s=publish_s, retraced=retraced, merge_s=merge_s,
+            incremental=incremental, dirty_frac=dirty_frac,
+            n_retrains=n_retrains)
         self.history.append(st)
         return st

@@ -21,6 +21,7 @@ Merge triggers (`MergePolicy.should_merge`):
 
 from __future__ import annotations
 
+import time
 from collections import Counter
 from dataclasses import dataclass
 
@@ -29,6 +30,9 @@ import numpy as np
 
 from ..core.dili import DILI, LAMBDA, bulk_load
 from ..core.flat import flatten
+from ..maintain import (IncrementalFlattener, LeafAccounting,
+                        MaintenanceConfig, MaintenanceScheduler,
+                        fold_with_accounting, run_retrains)
 from .epoch import EpochStats, SnapshotStore
 from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
                       overlay_device_arrays)
@@ -40,11 +44,19 @@ class MergePolicy:
     max_writes: int = 4096         # merge-lag trigger (writes since publish)
     pressure_lambda: float = LAMBDA  # per-leaf pending/omega trigger
     pressure_check_every: int = 256  # amortize the host-side leaf walk
+    # absolute floor for the pressure trigger: a leaf only counts toward a
+    # λ-pressure merge once it holds this many pending writes — a tiny
+    # leaf with a handful of pending entries trivially exceeds any ratio
+    # and would otherwise force a global publish for a few rows' worth of
+    # degradation (pathological once retrains keep frontier leaves small)
+    pressure_min_pending: int = 64
 
 
-def adjust_pressure(dili: DILI, ov: TombstoneOverlay) -> float:
+def adjust_pressure(dili: DILI, ov: TombstoneOverlay,
+                    min_pending: int = 1) -> float:
     """max over host leaves of pending-writes / current-pairs — the overlay
-    analogue of Alg. 7's Δ/Ω > λκ adjustment test."""
+    analogue of Alg. 7's Δ/Ω > λκ adjustment test.  Leaves with fewer than
+    `min_pending` pending writes are ignored (policy floor)."""
     if ov.count == 0:
         return 0.0
     keys, _, _ = ov.entries()
@@ -55,7 +67,9 @@ def adjust_pressure(dili: DILI, ov: TombstoneOverlay) -> float:
         lid = id(leaf)
         hits[lid] += 1
         omega[lid] = leaf.omega
-    return max(c / max(omega[lid], 1) for lid, c in hits.items())
+    return max((c / max(omega[lid], 1)
+                for lid, c in hits.items() if c >= min_pending),
+               default=0.0)
 
 
 class OnlineIndex:
@@ -65,11 +79,27 @@ class OnlineIndex:
     snapshot+overlay device lookup; the merge policy decides when to fold the
     overlay through the host DILI and publish a fresh epoch.  `flatten()` runs
     exactly once per merge — never per write.
+
+    With a `MaintenanceConfig` the merge becomes adaptive (DESIGN.md
+    section 12): folding feeds per-leaf accounting, drifted/tombstone-heavy
+    subtrees are locally retrained, the flatten is the incremental splice
+    (bit-identical, O(dirty)), and — with `background=True` — the whole
+    merge runs on a `MaintenanceScheduler` worker so the writer never
+    blocks on a publish.  During a background merge the folding overlay is
+    kept frozen under the live one and reads resolve live > frozen >
+    snapshot, so results stay exact at every instant; the frozen overlay is
+    dropped only AFTER the publish flip (re-applying already-folded entries
+    is idempotent, so readers are exact on either side of the flip).
+
+    Threading contract: ONE writer thread (writes, flush, stats) plus any
+    number of reader threads (`lookup` / `get`); the background worker only
+    ever runs one merge at a time.
     """
 
     def __init__(self, keys=None, vals=None, *, dili: DILI | None = None,
                  policy: MergePolicy | None = None, overlay_cap: int = 4096,
                  dtype=jnp.float64, pad: bool = True, early_exit: bool = True,
+                 maintenance: MaintenanceConfig | None = None,
                  **bulk_kw):
         if dili is None:
             dili = bulk_load(np.asarray(keys, np.float64), vals, **bulk_kw)
@@ -79,7 +109,18 @@ class OnlineIndex:
         self.store = SnapshotStore(dtype=dtype, pad=pad)
         self.overlay = TombstoneOverlay.empty(overlay_cap)
         self._overlay_cap0 = self.overlay.cap
-        self._ov_arrays: dict | None = None     # device mirror cache
+        # maintenance subsystem (all None => legacy monolithic merges)
+        self.maint = maintenance
+        m = maintenance
+        self.flattener = (IncrementalFlattener()
+                          if m is not None and m.incremental else None)
+        self.accounting = (LeafAccounting(m)
+                           if m is not None and m.retrain else None)
+        self.scheduler = (MaintenanceScheduler(m.max_queue)
+                          if m is not None and m.background else None)
+        self._merging: TombstoneOverlay | None = None   # frozen, folding
+        self._merge_failed = False           # frozen needs writer reclaim
+        self._ov_cache: tuple | None = None  # (overlay, merging, arrays)
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
         # incremental λ-pressure state: between merges the host DILI is never
@@ -89,7 +130,11 @@ class OnlineIndex:
         self._leaf_omega: dict[int, int] = {}   # id(leaf) -> omega
         self._unlocated_keys: list[float] = []  # written since last check
         self.n_flattens = 0
+        self.n_full_flattens = 0
+        self.n_incremental_flattens = 0
         self.n_merges = 0
+        self.n_retrains = 0
+        self.last_dirty_frac = 1.0
         self.merge_reasons: Counter = Counter()
         self._publish()
 
@@ -112,7 +157,6 @@ class OnlineIndex:
         self._note_writes(len(np.atleast_1d(keys)))
 
     def _note_writes(self, n: int) -> None:
-        self._ov_arrays = None
         self._writes_since_publish += n
         self._writes_since_pressure += n
         reason = self.should_merge()
@@ -129,7 +173,11 @@ class OnlineIndex:
             return "lag"
         if self._writes_since_pressure >= p.pressure_check_every:
             self._writes_since_pressure = 0
-            if self._incremental_pressure() > p.pressure_lambda:
+            # while a background merge is folding, the host tree is being
+            # mutated by the worker — skip the λ-pressure walk until it
+            # finishes (the fill/lag triggers above stay live)
+            if self._merging is None \
+                    and self._incremental_pressure() > p.pressure_lambda:
                 return "pressure"
         return None
 
@@ -145,37 +193,138 @@ class OnlineIndex:
         self._unlocated_keys.clear()
         if not self._leaf_hits:
             return 0.0
-        return max(c / max(self._leaf_omega[lid], 1)
-                   for lid, c in self._leaf_hits.items())
+        floor = self.policy.pressure_min_pending
+        return max((c / max(self._leaf_omega[lid], 1)
+                    for lid, c in self._leaf_hits.items() if c >= floor),
+                   default=0.0)
 
     def flush(self) -> EpochStats:
         """Explicit merge+publish; with an empty overlay nothing is folded or
-        republished and the current epoch's stats are returned."""
-        return self.merge("flush")
+        republished and the current epoch's stats are returned.  With
+        background maintenance this is the synchronous barrier: it drains
+        the worker and folds everything pending before returning."""
+        if self.scheduler is None:
+            return self.merge("flush")
+        while True:
+            self.scheduler.drain()
+            if self.overlay.count == 0 and self._merging is None:
+                return self.store.stats
+            n_err = len(self.scheduler.errors)
+            self.merge("flush")
+            self.scheduler.drain()
+            if len(self.scheduler.errors) > n_err and (
+                    self.overlay.count or self._merging is not None):
+                # the retry died too: surface it instead of spinning (the
+                # pending writes stay readable through the overlay chain)
+                raise RuntimeError(
+                    "background merge keeps failing; pending writes "
+                    "retained in the overlay:\n"
+                    + self.scheduler.errors[-1])
 
     def merge(self, reason: str = "explicit") -> EpochStats:
-        """Fold the overlay through the host DILI (Alg. 7/8) and publish."""
+        """Fold the overlay through the host DILI (Alg. 7/8) and publish —
+        inline, or on the maintenance worker when background is on."""
+        if self._merging is not None:
+            if not self._merge_failed:
+                return self.store.stats   # one merge in flight: coalesce
+            # a previous merge died mid-pipeline: reclaim its frozen
+            # writes HERE, on the writer thread (the worker must never
+            # touch self.overlay — it races writer assignments), newest
+            # entries winning, and retry below.  Reads were exact the
+            # whole time: the frozen overlay stayed visible.
+            self.overlay = self._merging.merged_with(self.overlay)
+            self._merging = None
+            self._merge_failed = False
         if self.overlay.count == 0:    # nothing pending: keep current epoch
             return self.store.stats
-        fold_overlay(self.dili, self.overlay)
-        fill = self.overlay.full_fraction
+        frozen = self.overlay
+        self._merging = frozen         # readers: live > frozen > snapshot
         self.overlay = TombstoneOverlay.empty(self._overlay_cap0)
-        self._ov_arrays = None
-        self._leaf_hits.clear()         # merge mutates the tree: leaf ids
-        self._leaf_omega.clear()        # and omegas are stale now
-        self._unlocated_keys.clear()
-        self.n_merges += 1
-        self.merge_reasons[reason] += 1
-        return self._publish(overlay_fill=fill)
-
-    def _publish(self, overlay_fill: float = 0.0) -> EpochStats:
-        flat = flatten(self.dili)      # the ONE flatten per epoch
-        self.n_flattens += 1
-        st = self.store.publish(flat, overlay_fill=overlay_fill,
-                                merge_lag=self._writes_since_publish)
+        # trigger-counter resets happen HERE, on the writer thread, at
+        # freeze time: the frozen writes are on their way into the next
+        # epoch, and the worker must never write these fields (a worker
+        # reset would race the writer's own `+= n` updates).  The stale
+        # λ-pressure leaf cache goes with them (the fold invalidates it).
+        lag = self._writes_since_publish
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
+        self._leaf_hits = Counter()
+        self._leaf_omega = {}
+        self._unlocated_keys = []
+        if self.scheduler is not None and self.scheduler.submit(
+                lambda: self._merge_impl(frozen, reason, lag)):
+            return self.store.stats
+        return self._merge_impl(frozen, reason, lag)  # sync / closed worker
+
+    def _merge_impl(self, frozen: TombstoneOverlay, reason: str,
+                    lag: int) -> EpochStats:
+        """The merge pipeline: fold (+accounting) -> retrain -> flatten ->
+        publish.  Runs on the caller's thread or the maintenance worker.
+        On failure the frozen overlay STAYS installed (reads keep
+        resolving it — exactness holds) and is flagged; the next merge on
+        the writer thread reclaims it into the live overlay (newer wins;
+        re-folding partially-applied entries is idempotent) and retries.
+        The worker never assigns self.overlay or the trigger counters —
+        that would race the writer's own updates."""
+        try:
+            return self._merge_steps(frozen, reason, lag)
+        except BaseException:
+            self._merge_failed = True
+            raise
+
+    def _merge_steps(self, frozen: TombstoneOverlay, reason: str,
+                     lag: int) -> EpochStats:
+        t0 = time.perf_counter()
+        if self.accounting is not None:
+            fold_with_accounting(self.dili, frozen, self.accounting)
+            retrains = run_retrains(self.dili, self.accounting)
+        else:
+            fold_overlay(self.dili, frozen)
+            retrains = 0
+        merge_s = time.perf_counter() - t0
+        self.n_merges += 1
+        self.n_retrains += retrains
+        self.merge_reasons[reason] += 1
+        st = self._publish(overlay_fill=frozen.full_fraction,
+                           merge_s=merge_s, n_retrains=retrains,
+                           merge_lag=lag)
+        # drop the frozen overlay only AFTER the flip: between publish and
+        # here readers re-apply already-folded entries — idempotent
+        self._merging = None
         return st
+
+    def _publish(self, overlay_fill: float = 0.0, merge_s: float = 0.0,
+                 n_retrains: int = 0, merge_lag: int = 0) -> EpochStats:
+        t0 = time.perf_counter()
+        if self.flattener is not None:
+            flat = self.flattener.flatten(self.dili, self.dili.take_dirty())
+            incremental = self.flattener.last_incremental
+            dirty_frac = (self.flattener.last_dirty_rows
+                          / max(self.flattener.last_total_rows, 1))
+        else:
+            flat = flatten(self.dili)  # the ONE (full) flatten per epoch
+            self.dili.take_dirty()     # drain: nothing is dirty relative
+            incremental = False        # to a fresh full materialization
+            dirty_frac = 1.0
+        merge_s += time.perf_counter() - t0
+        self.n_flattens += 1
+        if incremental:
+            self.n_incremental_flattens += 1
+        else:
+            self.n_full_flattens += 1
+        self.last_dirty_frac = dirty_frac
+        st = self.store.publish(flat, overlay_fill=overlay_fill,
+                                merge_lag=merge_lag,
+                                merge_s=merge_s, incremental=incremental,
+                                dirty_frac=dirty_frac,
+                                n_retrains=n_retrains)
+        return st
+
+    def close(self) -> None:
+        """Stop the background worker (if any).  Does NOT flush: pending
+        overlay writes stay readable, they are just no longer folded."""
+        if self.scheduler is not None:
+            self.scheduler.close()
 
     # -- read path -----------------------------------------------------------
 
@@ -183,11 +332,27 @@ class OnlineIndex:
     def epoch(self) -> int:
         return self.store.epoch
 
+    def pending_entries(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(keys, vals, tomb) of every pending write — the live overlay
+        over the frozen (merging) one.  Callers composing this with the
+        published snapshot must capture it BEFORE reading the snapshot:
+        if the background publish lands in between, the newer snapshot
+        already contains the frozen entries and re-applying them is
+        idempotent; the other order can lose them."""
+        ov, mg = self.overlay, self._merging
+        if mg is None:
+            return ov.entries()
+        return mg.merged_with(ov).entries()
+
     def _overlay_arrays(self) -> dict:
-        if self._ov_arrays is None:
-            self._ov_arrays = overlay_device_arrays(self.overlay,
-                                                    self.store.dtype)
-        return self._ov_arrays
+        ov, mg = self.overlay, self._merging
+        c = self._ov_cache
+        if c is not None and c[0] is ov and c[1] is mg:
+            return c[2]
+        eff = ov if mg is None else mg.merged_with(ov)
+        arrs = overlay_device_arrays(eff, self.store.dtype)
+        self._ov_cache = (ov, mg, arrs)
+        return arrs
 
     def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
         """Batched fused snapshot+overlay lookup -> (vals, found): one jitted
@@ -195,17 +360,29 @@ class OnlineIndex:
         manual threading), query buffer donated (it is freshly uploaded
         here, so the read path never copies it back)."""
         from ..core import search as S
+        # overlay BEFORE snapshot (see pending_entries for the ordering)
+        ova = self._overlay_arrays()
+        idx = self.store.idx
         q = jnp.asarray(queries, self.store.dtype)
-        v, f = S.search_with_overlay(self.store.idx, self._overlay_arrays(),
+        v, f = S.search_with_overlay(idx, ova,
                                      q, early_exit=self.early_exit,
                                      donate_queries=q is not queries)
         return np.asarray(v), np.asarray(f)
 
     def get(self, key: float) -> int | None:
-        """Host-side exact point read (overlay state wins)."""
-        state, v = self.overlay.get(float(key))
-        if state == LIVE:
-            return v
-        if state == TOMBSTONE:
-            return None
-        return self.dili.search(float(key))
+        """Host-side exact point read (overlay state wins).  Resolves
+        live overlay > frozen overlay > published pair table — never the
+        mutable host tree, which a background merge may be folding."""
+        key = float(key)
+        ov, mg = self.overlay, self._merging
+        for o in ((ov,) if mg is None else (ov, mg)):
+            state, v = o.get(key)
+            if state == LIVE:
+                return v
+            if state == TOMBSTONE:
+                return None
+        flat = self.store.flat
+        i = int(np.searchsorted(flat.pair_key, key))
+        if i < flat.n_pairs and flat.pair_key[i] == key:
+            return int(flat.pair_val[i])
+        return None

@@ -83,6 +83,12 @@ class TombstoneOverlay:
         return self._apply(k, np.zeros(len(k), np.int64),
                            np.ones(len(k), np.int8))
 
+    def merged_with(self, newer: "TombstoneOverlay") -> "TombstoneOverlay":
+        """One overlay equivalent to `self` with `newer` applied on top
+        (newer wins per key).  Used by the background-merge read path: the
+        frozen (merging) overlay under the live one."""
+        return self._apply(*newer.entries())
+
     # -- host-side point state ----------------------------------------------
 
     def get(self, key: float) -> tuple[int, int | None]:

@@ -25,6 +25,17 @@ read-heavy evaluation point:
   dili_paper  85% lookup / 5% upsert / 5% delete / 5% range, uniform —
               the read-heavy mixed point the DILI paper evaluates
               (Fig. 7/8: read-heavy with inserts AND deletes).
+  shift_fb_logn  write-heavy with a mid-stream key-distribution shift:
+              the first half inserts uniform fresh keys over the loaded
+              range ("fb"-like), the second half draws from a disjoint
+              lognormal-gap cluster beyond it ("logn"-like) while lookups
+              chase the newest keys — the Fig. 9b/10 drift scenario as a
+              replayable stream (exercises drift-triggered retrains).
+  ttl_storm   insert waves followed by correlated delete storms: a
+              deterministic wave schedule (wave_len) cycles upsert-only
+              batches then delete batches whose victims are the OLDEST
+              live keys (TTL expiry), stressing tombstone-density
+              compaction and merge/publish latency.
 
 Keys are integer-valued floats: exactly representable in f64 and — when
 the universe stays below 2^24 — in f32 too, so one stream can drive the
@@ -78,6 +89,17 @@ class WorkloadSpec:
     probe keys guaranteed absent (deleted or never inserted).  `scan_len`
     bounds the rank-span of range scans; `max_hits` is the per-query range
     window the runner requests (both sides of the diff truncate at it).
+
+    Scenario shaping (PR 5):
+      * `shift_frac` > 0 shifts the insert-key distribution mid-stream:
+        after that fraction of batches, fresh keys come from a disjoint
+        lognormal-gap cluster beyond the loaded range instead of the
+        uniform odd-integer pool (fb -> logn drift).
+      * `delete_policy` — "popular" samples victims by the spec's
+        distribution; "oldest" expires the oldest live keys (TTL).
+      * `wave_len` > 0 replaces the per-batch random op draw with a
+        deterministic cycle of `wave_len` batches apportioned by the mix
+        (insert waves, then delete storms — correlated, not interleaved).
     """
     name: str = "custom"
     n_ops: int = 10000
@@ -94,6 +116,9 @@ class WorkloadSpec:
     miss_frac: float = 0.05
     scan_len: int = 100
     max_hits: int = 64
+    shift_frac: float = 0.0
+    delete_policy: str = "popular"
+    wave_len: int = 0
     seed: int = 0
 
     def __post_init__(self):
@@ -105,6 +130,13 @@ class WorkloadSpec:
             raise ValueError(f"mix fractions must sum to 1, got {total}")
         if self.n_ops < 1 or self.batch_size < 1:
             raise ValueError("n_ops and batch_size must be >= 1")
+        if self.delete_policy not in ("popular", "oldest"):
+            raise ValueError(f"unknown delete_policy "
+                             f"{self.delete_policy!r}")
+        if not 0.0 <= self.shift_frac < 1.0:
+            raise ValueError("shift_frac must be in [0, 1)")
+        if self.wave_len < 0:
+            raise ValueError("wave_len must be >= 0")
 
     @property
     def mix(self) -> np.ndarray:
@@ -135,6 +167,14 @@ PRESETS: dict[str, WorkloadSpec] = {
     "dili_paper": WorkloadSpec(name="dili_paper", lookup=0.85, upsert=0.05,
                                delete=0.05, range_=0.05, insert_frac=0.5,
                                distribution="uniform"),
+    "shift_fb_logn": WorkloadSpec(name="shift_fb_logn", lookup=0.4,
+                                  upsert=0.5, delete=0.05, range_=0.05,
+                                  insert_frac=0.8, distribution="latest",
+                                  shift_frac=0.5, miss_frac=0.02),
+    "ttl_storm": WorkloadSpec(name="ttl_storm", lookup=0.2, upsert=0.5,
+                              delete=0.3, insert_frac=1.0,
+                              distribution="uniform",
+                              delete_policy="oldest", wave_len=10),
 }
 
 
@@ -203,6 +243,33 @@ def generate_stream(spec: WorkloadSpec, loaded_keys: np.ndarray,
     pool_i = 0
     val_seq = val_base
 
+    # mid-stream distribution shift: after `shift_frac` of the batches,
+    # fresh keys come from a disjoint odd-integer cluster beyond the
+    # phase-1 pool, with lognormal gaps (the "logn" key shape) — still
+    # integer-valued, so the f32 bit-exactness convention holds
+    shift_at = (int(round(n_batches * spec.shift_frac))
+                if spec.shift_frac > 0 else n_batches + 1)
+    if spec.shift_frac > 0:
+        base = (int(insert_pool.max()) if len(insert_pool)
+                else int(loaded_keys.max()) + 2 * spec.n_ops) + 1 | 1
+        gaps = np.maximum(rng.lognormal(0.0, 1.0, spec.n_ops), 1.0)
+        shift_pool = base + 2 * np.cumsum(gaps.astype(np.int64))
+        shift_pool = shift_pool.astype(np.float64)
+        shift_pool = shift_pool[~np.isin(shift_pool, loaded_keys)]
+    else:
+        shift_pool = np.zeros(0, np.float64)
+    shift_i = 0
+
+    # deterministic wave schedule: `wave_len` batches per cycle,
+    # apportioned by the mix in OPS order (upsert waves before the
+    # correlated delete storm), every nonzero op class represented
+    wave: list[str] = []
+    if spec.wave_len:
+        counts = np.floor(spec.mix * spec.wave_len).astype(int)
+        counts[(spec.mix > 0) & (counts == 0)] = 1
+        for op_name, c in zip(OPS, counts):
+            wave += [op_name] * int(c)
+
     def pick_keys(size: int) -> np.ndarray:
         """Distribution-weighted live keys for this batch."""
         n = len(live)
@@ -214,27 +281,36 @@ def generate_stream(spec: WorkloadSpec, loaded_keys: np.ndarray,
             return live.by_age[len(live.by_age) - 1 - ranks]
         return live.sorted[scatter_ranks(ranks, n)]
 
-    for _ in range(n_batches):
+    for b_i in range(n_batches):
         B = min(spec.batch_size, ops_left)
         ops_left -= B
-        op = OPS[rng.choice(4, p=spec.mix)]
+        shifted = b_i >= shift_at
+        op = (wave[b_i % len(wave)] if wave
+              else OPS[rng.choice(4, p=spec.mix)])
         if op == "lookup":
             q = pick_keys(B)
             n_miss = int(round(B * spec.miss_frac))
             if n_miss:
                 # absent keys: recently deleted first, else unseen pool keys
                 pool = np.asarray(live.dead[-n_miss:], np.float64)
-                if len(pool) < n_miss and pool_i < len(insert_pool):
-                    extra = insert_pool[pool_i: pool_i + (n_miss - len(pool))]
+                if len(pool) < n_miss:
+                    cur_pool, cur_i = ((shift_pool, shift_i) if shifted
+                                       else (insert_pool, pool_i))
+                    extra = cur_pool[cur_i: cur_i + (n_miss - len(pool))]
                     pool = np.concatenate([pool, extra])
                 if len(pool):
                     q[rng.integers(0, B, len(pool))] = pool
             batches.append(OpBatch("lookup", keys=q))
         elif op == "upsert":
             n_new = int(round(B * spec.insert_frac))
-            n_new = min(n_new, len(insert_pool) - pool_i)
-            new = insert_pool[pool_i: pool_i + n_new]
-            pool_i += n_new
+            if shifted:
+                n_new = min(n_new, len(shift_pool) - shift_i)
+                new = shift_pool[shift_i: shift_i + n_new]
+                shift_i += n_new
+            else:
+                n_new = min(n_new, len(insert_pool) - pool_i)
+                new = insert_pool[pool_i: pool_i + n_new]
+                pool_i += n_new
             upd = pick_keys(B - n_new)
             keys = np.concatenate([new, upd])
             vals = np.arange(val_seq, val_seq + len(keys), dtype=np.int64)
@@ -249,7 +325,10 @@ def generate_stream(spec: WorkloadSpec, loaded_keys: np.ndarray,
             if B_d == 0:
                 batches.append(OpBatch("lookup", keys=pick_keys(B)))
                 continue
-            victims = np.unique(pick_keys(B_d))
+            if spec.delete_policy == "oldest":     # TTL expiry order
+                victims = np.unique(live.by_age[:B_d])
+            else:
+                victims = np.unique(pick_keys(B_d))
             batches.append(OpBatch("delete", keys=victims))
             live.delete(victims)
         else:                                    # range

@@ -183,6 +183,18 @@ class WorkloadRunner:
             if self.strict and msgs:
                 raise WorkloadDivergence("; ".join(msgs))
         report.final_stats = self.index.stats()
+        # off-thread merges must stay oracle-exact AND alive: a background
+        # maintenance task that died is a silent correctness/liveness hole
+        # the per-batch diffs may not have tripped over — fail loudly
+        n_err = report.final_stats.get("maint_errors", 0)
+        if n_err:
+            logs = report.final_stats.get("maint_error_logs", [])
+            msg = (f"{report.name} on engine {report.engine!r}: "
+                   f"{n_err} background maintenance task(s) failed"
+                   + ("\n" + "\n".join(logs) if logs else ""))
+            report.divergences.append(msg)
+            if self.strict:
+                raise WorkloadDivergence(msg)
         return report
 
 

@@ -12,7 +12,8 @@ not approximately.
 import numpy as np
 import pytest
 
-from repro.api import IndexConfig, LearnedIndex, manual_merge_policy
+from repro.api import (IndexConfig, LearnedIndex, MaintenanceConfig,
+                       manual_merge_policy)
 
 ENGINES = ("local", "pallas", "sharded")
 
@@ -117,7 +118,11 @@ def test_write_and_delete_visibility_equivalence(fleet):
 STATS_CONTRACT = frozenset((
     "engine", "epoch", "max_depth", "snapshot_keys", "pending_writes",
     "overlay_live", "overlay_tombstones", "overlay_cap", "overlay_fill",
-    "n_flattens", "n_merges", "device_bytes"))
+    "n_flattens", "n_merges", "device_bytes",
+    # maintenance counters (PR 5): every engine reports them, with or
+    # without a MaintenanceConfig
+    "n_full_flattens", "n_incremental_flattens", "n_retrains",
+    "dirty_row_fraction", "maint_queue_depth", "maint_errors"))
 
 
 def test_stats_contract_equivalence():
@@ -167,6 +172,48 @@ def test_stats_contract_equivalence():
         # an empty flush must NOT bump the publish epoch on any engine
         ix.flush()
         assert ix.stats()["epoch"] == 2, e
+        # without a MaintenanceConfig every flatten is a full one and the
+        # maintenance counters sit at their legacy values
+        s = ix.stats()
+        assert s["n_incremental_flattens"] == 0, e
+        assert s["n_full_flattens"] == s["n_flattens"], e
+        assert (s["n_retrains"], s["maint_queue_depth"],
+                s["maint_errors"]) == (0, 0, 0), e
+        assert s["dirty_row_fraction"] == 1.0, e
+
+
+def test_stats_maintenance_counters_equivalence():
+    """With a (synchronous) MaintenanceConfig, every engine reports the
+    same maintenance-counter semantics: a post-build merge flattens
+    incrementally (splice), full-flatten count stays at the build count,
+    and the dirty-row fraction reflects a partial re-materialization."""
+    rng = np.random.default_rng(7)
+    # irregular gaps => a multi-segment tree (uniform keys collapse to one
+    # perfect leaf, where splice == full by construction); even integers
+    # keep the pallas f32 convention
+    keys = np.unique(rng.integers(0, 1 << 21, 6000)).astype(np.float64) * 2
+    cfg = IndexConfig(merge=manual_merge_policy(), overlay_cap=256,
+                      maintenance=MaintenanceConfig(retrain=False))
+    for e in ENGINES:
+        ix = LearnedIndex.build(keys, config=cfg.with_engine(e))
+        builds = ix.stats()["n_full_flattens"]
+        assert builds >= 1 and ix.stats()["n_incremental_flattens"] == 0, e
+        # hot-spot writes: only a narrow key region gets dirty
+        hot = (rng.integers(0, 60, 64) * 2 + 1).astype(np.float64)
+        ix.upsert(hot, np.arange(len(hot), dtype=np.int64))
+        ix.flush()
+        # the first maintained merge seeds the segment cache: full on a
+        # cold flattener, incremental from then on
+        hot2 = hot[:32]
+        ix.upsert(hot2, np.arange(len(hot2), dtype=np.int64))
+        ix.flush()
+        s = ix.stats()
+        assert s["n_incremental_flattens"] >= 1, (e, s)
+        assert s["n_retrains"] == 0 and s["maint_errors"] == 0, e
+        assert 0.0 < s["dirty_row_fraction"] <= 1.0, e
+        assert s["dirty_row_fraction"] < 1.0, (e, s)   # hot-spot => partial
+        assert len(ix.maint_timings()) >= 1, e
+        ix.close()
 
 
 def test_pallas_engine_large_magnitude_keys_exact():
@@ -196,7 +243,8 @@ def test_sharded_engine_multi_device_equivalence():
     from tests.test_distributed import run_sub
     out = run_sub("""
         import numpy as np
-        from repro.api import IndexConfig, LearnedIndex, manual_merge_policy
+        from repro.api import (IndexConfig, LearnedIndex, MaintenanceConfig,
+                       manual_merge_policy)
         rng = np.random.default_rng(5)
         keys = np.unique(rng.integers(0, 1 << 22, 20000)).astype(np.float64)
         cfg = IndexConfig(merge=manual_merge_policy())

@@ -1,0 +1,353 @@
+"""The adaptive maintenance subsystem (DESIGN.md section 12).
+
+Three layers again, cheapest first: the incremental flattener's exactness
+contract (splice == full `flatten()`, bit for bit, across random
+upsert/delete folds — deterministic grid plus a hypothesis property test),
+then the drift/tombstone accounting and local retrains in isolation, then
+the concurrency acceptance: reader threads hammer lookups while background
+merges fold/retrain/publish, and every answer is diffed against the
+ground truth.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import IndexConfig, LearnedIndex, MaintenanceConfig
+from repro.core.dili import Internal, bulk_load, rebuild_subtree
+from repro.core.flat import flatten
+from repro.maintain import (IncrementalFlattener, LeafAccounting,
+                            MaintenanceScheduler, ks_uniform, leaf_drift)
+from repro.online import MergePolicy, OnlineIndex
+from repro.workloads import (PRESETS, SortedOracle, WorkloadRunner,
+                             generate_stream)
+
+FLAT_FIELDS = ("a", "b", "base", "fo", "dense", "tag", "key", "val",
+               "pair_key", "pair_val", "pair_slot")
+
+
+def assert_flat_identical(got, want, msg=""):
+    for f in FLAT_FIELDS:
+        g, w = getattr(got, f), getattr(want, f)
+        assert g.dtype == w.dtype, (msg, f, g.dtype, w.dtype)
+        np.testing.assert_array_equal(g, w, err_msg=f"{msg}: {f}")
+    assert (got.root, got.max_depth) == (want.root, want.max_depth), msg
+    assert (got.key_lo, got.key_hi) == (want.key_lo, want.key_hi), msg
+
+
+def _irregular_keys(rng, n=8000):
+    # irregular gaps => a genuinely multi-segment tree (uniform integer
+    # keys collapse into one perfect leaf and prove nothing)
+    return np.unique(rng.integers(0, 1 << 22, n)).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# incremental flattener: bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_splice_flatten_bit_identical_across_folds():
+    """Cold build, random upsert/delete/update rounds, and retrains: after
+    every round the splice output must equal a from-scratch flatten()."""
+    rng = np.random.default_rng(0)
+    keys = _irregular_keys(rng)
+    d = bulk_load(keys, sample_stride=2)
+    fl = IncrementalFlattener()
+    assert_flat_identical(fl.flatten(d, d.take_dirty()), flatten(d), "cold")
+    assert not fl.last_incremental
+
+    for step in range(4):
+        ins = np.setdiff1d(rng.integers(0, 1 << 22, 250).astype(np.float64),
+                           keys)
+        for j, k in enumerate(ins):
+            d.upsert(float(k), 10_000 + j)
+        for k in keys[rng.integers(0, len(keys), 80)]:
+            d.delete(float(k))
+        for j, k in enumerate(keys[rng.integers(0, len(keys), 150)]):
+            d.upsert(float(k), 20_000 + j)
+        assert_flat_identical(fl.flatten(d, d.take_dirty()), flatten(d),
+                              f"fold{step}")
+        assert fl.last_incremental
+        assert fl.n_fallback_full == 0
+        assert fl.last_dirty_segments < fl.last_total_segments
+
+    # retrains swap whole subtrees (possibly Internal-rooted): the cache
+    # must miss on identity and the splice must stay exact
+    tops = (d.root.children if isinstance(d.root, Internal) else [d.root])
+    rebuilt = 0
+    for c in list(tops):
+        if not isinstance(c, Internal) and c.omega >= 2:
+            assert rebuild_subtree(d, c) is not None
+            rebuilt += 1
+        if rebuilt == 4:
+            break
+    assert rebuilt
+    assert_flat_identical(fl.flatten(d, d.take_dirty()), flatten(d),
+                          "retrain")
+    assert fl.n_fallback_full == 0
+
+
+def test_splice_flatten_search_serves_identically():
+    """The spliced snapshot is not just array-equal — it answers device
+    lookups and ranges identically (belt to the braces above)."""
+    from repro.api import DeviceSnapshot
+    from repro.core import search as S
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    keys = _irregular_keys(rng, 4000)
+    d = bulk_load(keys)
+    fl = IncrementalFlattener()
+    fl.flatten(d, d.take_dirty())
+    for j, k in enumerate(keys[rng.integers(0, len(keys), 400)]):
+        d.upsert(float(k), 90_000 + j)
+    inc = fl.flatten(d, d.take_dirty())
+    idx = DeviceSnapshot.from_flat(inc)
+    q = jnp.asarray(keys[rng.integers(0, len(keys), 2048)])
+    v, f = S.search_batch(idx, q, early_exit=True)
+    assert bool(np.asarray(f).all())
+    host = [d.search(float(x)) for x in np.asarray(q)[:64]]
+    np.testing.assert_array_equal(np.asarray(v)[:64], host)
+
+
+def test_splice_flatten_property():
+    """Hypothesis sweep: arbitrary interleaved upsert/delete folds at
+    arbitrary fold boundaries never break bit-identity."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    base = np.unique(np.random.default_rng(3)
+                     .integers(0, 1 << 20, 1500)).astype(np.float64)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["upsert", "delete", "fold"]),
+                              st.integers(0, 1 << 20)),
+                    min_size=1, max_size=60),
+           st.integers(0, 2 ** 31 - 1))
+    def run(ops, seed):
+        d = bulk_load(base)
+        fl = IncrementalFlattener()
+        fl.flatten(d, d.take_dirty())
+        for i, (op, k) in enumerate(ops):
+            if op == "upsert":
+                d.upsert(float(k), i)
+            elif op == "delete":
+                d.delete(float(k))
+            else:
+                assert_flat_identical(fl.flatten(d, d.take_dirty()),
+                                      flatten(d), f"fold@{i}")
+        assert_flat_identical(fl.flatten(d, d.take_dirty()), flatten(d),
+                              "final")
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# accounting + retrain
+# ---------------------------------------------------------------------------
+
+
+def test_ks_uniform_statistic():
+    assert ks_uniform(np.zeros(0)) == 0.0
+    # uniform grid: tiny distance; point mass: distance -> 1
+    assert ks_uniform(np.linspace(0.01, 0.99, 100)) < 0.05
+    assert ks_uniform(np.full(100, 0.5)) > 0.45
+
+
+def test_drift_triggers_retrain_and_restores_layout():
+    """Clustered arrivals into one leaf's region cross the KS threshold,
+    the planner flags exactly that region, and the rebuild re-runs the
+    top-down individualization (new node object, search stays exact)."""
+    rng = np.random.default_rng(4)
+    keys = _irregular_keys(rng, 6000)
+    cfg = MaintenanceConfig(retrain_min_writes=32, drift_threshold=0.35)
+    oi = OnlineIndex(keys, policy=MergePolicy(max_writes=1 << 40,
+                                              pressure_check_every=1 << 40),
+                     overlay_cap=1 << 14, maintenance=cfg)
+    # hammer one narrow band with fresh keys (heavy one-sided drift)
+    lo = float(keys[len(keys) // 2])
+    band = np.setdiff1d(np.arange(lo + 1, lo + 400, 3, dtype=np.float64),
+                        keys)
+    oi.upsert_batch(band, np.arange(len(band)))
+    oi.flush()
+    assert oi.n_retrains >= 1
+    assert oi.n_incremental_flattens >= 1
+    # exactness after the rebuild, via the published snapshot
+    v, f = oi.lookup(band[:64])
+    assert bool(np.asarray(f).all())
+    v, f = oi.lookup(keys[:256])
+    assert bool(np.asarray(f).all())
+
+
+def test_tombstone_density_triggers_compaction():
+    rng = np.random.default_rng(5)
+    keys = _irregular_keys(rng, 6000)
+    cfg = MaintenanceConfig(retrain_min_writes=16, tombstone_trigger=0.2,
+                            drift_threshold=2.0)     # drift path disabled
+    oi = OnlineIndex(keys, policy=MergePolicy(max_writes=1 << 40,
+                                              pressure_check_every=1 << 40),
+                     overlay_cap=1 << 14, maintenance=cfg)
+    # delete every other key of a wide slice: the touched leaves end up
+    # ~50% tombstones but keep enough live pairs to be worth rebuilding
+    victims = keys[100: 1124: 2]
+    oi.delete_batch(victims)
+    oi.flush()
+    assert oi.n_retrains >= 1
+    _, f = oi.lookup(victims[:64])
+    assert not np.asarray(f).any()
+
+
+def test_leaf_drift_uniform_arrivals_low():
+    d = bulk_load(np.unique(np.random.default_rng(6)
+                            .integers(0, 1 << 20, 4000)).astype(np.float64))
+    leaf, _ = d.locate_leaf(1000.0)
+    from repro.core.dili import collect_pairs
+    ks = [p[0] for p in collect_pairs(leaf)]
+    assert leaf_drift(leaf, ks) < 0.3       # own keys: no drift
+
+
+# ---------------------------------------------------------------------------
+# scheduler + background merges
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_runs_records_errors_and_closes():
+    sched = MaintenanceScheduler(max_queue=2)
+    done = []
+    assert sched.submit(lambda: done.append(1))
+    sched.drain()
+    assert done == [1] and sched.depth == 0
+    assert sched.submit(lambda: 1 / 0)
+    sched.drain()
+    assert len(sched.errors) == 1 and "ZeroDivisionError" in sched.errors[0]
+    sched.close()
+    assert not sched.submit(lambda: done.append(2))   # closed: refused
+    sched.close()                                     # idempotent
+
+
+def test_background_merge_never_blocks_correctness():
+    """Reader threads hammer a stable probe set while the writer drives
+    background merges (fold/retrain/splice/publish on the worker); every
+    read must be exact at every instant, and the final state must equal
+    the oracle."""
+    rng = np.random.default_rng(7)
+    keys = np.unique(rng.integers(0, 1 << 21, 6000)).astype(np.float64) * 2
+    vals = np.arange(len(keys), dtype=np.int64)
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="local", overlay_cap=512,
+        merge=MergePolicy(max_writes=256),
+        maintenance=MaintenanceConfig(background=True,
+                                      retrain_min_writes=64)))
+    oracle = SortedOracle(keys, vals)
+
+    # probe keys the writer never touches: their answers are constant
+    probe = keys[:512]
+    want_v = vals[:512]
+    stop = threading.Event()
+    failures: list[str] = []
+
+    def reader():
+        while not stop.is_set():
+            v, f = ix.lookup(probe)
+            if not (f.all() and np.array_equal(v, want_v)):
+                failures.append("probe lookup diverged mid-publish")
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    # writer: upserts/deletes restricted to keys[1000:] and fresh odd keys
+    fresh = np.arange(keys.max() + 1, keys.max() + 4000, 2)
+    try:
+        for step in range(30):
+            new = fresh[step * 64: (step + 1) * 64]
+            nv = np.arange(len(new), dtype=np.int64) + step * 1000
+            ix.upsert(new, nv)
+            oracle.upsert(new, nv)
+            dead = keys[1000 + step * 16: 1000 + (step + 1) * 16]
+            ix.delete(dead)
+            oracle.delete(dead)
+            v, f = ix.lookup(new)
+            wv, wf = oracle.lookup(new)
+            np.testing.assert_array_equal(f, wf)
+            np.testing.assert_array_equal(v[f], wv[wf])
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert failures == []
+    st = ix.flush()
+    assert st["n_merges"] >= 1 and st["maint_errors"] == 0
+    assert st["n_incremental_flattens"] >= 1
+    k, v = ix.items()
+    wk, wv = oracle.items()
+    np.testing.assert_array_equal(k, wk)
+    np.testing.assert_array_equal(v, wv)
+    ix.close()
+
+
+def test_background_workload_replay_oracle_exact():
+    """The CI smoke in miniature: shift_fb_logn through the local engine
+    with background maintenance, per-batch oracle diffing, zero
+    divergence; the runner also fails on any background task error."""
+    U = np.arange(0, 6000, 2, dtype=np.float64)
+    ix = LearnedIndex.build(U, config=IndexConfig(
+        engine="local", overlay_cap=512,
+        maintenance=MaintenanceConfig(background=True)))
+    spec = PRESETS["shift_fb_logn"].scaled(n_ops=1500, batch_size=64,
+                                           seed=17)
+    rep = WorkloadRunner(ix).run(generate_stream(spec, U), spec=spec)
+    assert rep.divergences == []
+    ix.flush()
+    assert ix.stats()["maint_errors"] == 0
+    ix.close()
+
+
+def test_background_rejected_off_local():
+    U = np.arange(0, 400, 2, dtype=np.float64)
+    for eng in ("pallas", "sharded"):
+        with pytest.raises(ValueError, match="background maintenance"):
+            LearnedIndex.build(U, config=IndexConfig(
+                engine=eng, maintenance=MaintenanceConfig(background=True)))
+
+
+def test_failed_merge_restores_pending_writes(monkeypatch):
+    """A merge that dies mid-fold must not lose writes: the frozen overlay
+    folds back into the live one and reads stay exact."""
+    import repro.online.merge as M
+    keys = np.arange(0, 2000, 2, dtype=np.float64)
+    oi = OnlineIndex(keys, policy=MergePolicy(max_writes=1 << 40,
+                                              pressure_check_every=1 << 40),
+                     overlay_cap=1 << 14)
+    oi.upsert_batch(np.arange(1, 201, 2, dtype=np.float64),
+                    np.arange(100, dtype=np.int64))
+    monkeypatch.setattr(M, "fold_overlay",
+                        lambda *a: (_ for _ in ()).throw(RuntimeError("x")))
+    with pytest.raises(RuntimeError):
+        oi.merge("explicit")
+    # the frozen overlay stays installed (reads resolve it) until the
+    # writer thread reclaims it on the next merge — nothing lost
+    assert oi._merging is not None and oi._merge_failed
+    k, _, _ = oi.pending_entries()
+    assert len(k) == 100
+    v, f = oi.lookup(np.arange(1, 201, 2, dtype=np.float64))
+    assert np.asarray(f).all()
+    monkeypatch.undo()
+    st = oi.flush()                          # reclaim + retry succeeds
+    assert oi._merging is None and not oi._merge_failed
+    assert oi.overlay.count == 0 and st.n_keys == len(keys) + 100
+
+
+def test_flush_is_a_synchronous_barrier():
+    U = np.arange(0, 4000, 2, dtype=np.float64)
+    ix = LearnedIndex.build(U, config=IndexConfig(
+        engine="local", overlay_cap=1 << 14,
+        merge=MergePolicy(max_writes=1 << 40,
+                          pressure_check_every=1 << 40),
+        maintenance=MaintenanceConfig(background=True)))
+    new = np.arange(1, 2000, 2, dtype=np.float64)
+    ix.upsert(new, np.arange(len(new), dtype=np.int64))
+    st = ix.flush()
+    assert st["pending_writes"] == 0
+    assert st["epoch"] == 2 and st["n_merges"] == 1
+    assert st["snapshot_keys"] == len(U) + len(new)
+    ix.close()

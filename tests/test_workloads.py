@@ -16,7 +16,7 @@ bit-exact on every engine — no tolerances.
 import numpy as np
 import pytest
 
-from repro.api import IndexConfig, LearnedIndex
+from repro.api import IndexConfig, LearnedIndex, MaintenanceConfig
 from repro.workloads import (PRESETS, SortedOracle, WorkloadDivergence,
                              WorkloadRunner, WorkloadSpec, generate_stream,
                              run_preset, sample_indices, stream_op_counts)
@@ -150,6 +150,62 @@ def test_latest_distribution_prefers_recent_inserts():
     assert hits_new > hits_loaded
 
 
+def test_shift_preset_moves_insert_distribution():
+    """shift_fb_logn: fresh keys before the shift point stay inside the
+    phase-1 odd-integer pool; after it they come from the disjoint
+    lognormal cluster beyond the loaded range (the fb -> logn drift)."""
+    spec = PRESETS["shift_fb_logn"].scaled(n_ops=2000, batch_size=64,
+                                           seed=3)
+    batches = generate_stream(spec, UNIVERSE)
+    loaded = set(UNIVERSE.tolist())
+    phase1_hi = UNIVERSE.max() + 2 * spec.n_ops     # phase-1 pool ceiling
+    n_b = len(batches)
+    early_new, late_new = [], []
+    for i, b in enumerate(batches):
+        if b.op != "upsert":
+            continue
+        fresh = [k for k in b.keys.tolist() if k not in loaded]
+        loaded |= set(b.keys.tolist())
+        (early_new if i < n_b // 2 else late_new).extend(fresh)
+    assert early_new and late_new
+    assert max(early_new) < phase1_hi               # pre-shift: fb pool
+    late = np.asarray(late_new)
+    assert (late > phase1_hi).mean() > 0.9          # post-shift: logn pool
+    # integer-valued below 2^24: the f32 bit-exactness convention holds
+    assert np.all(late == np.rint(late)) and late.max() < 2 ** 24
+
+
+def test_ttl_storm_waves_and_oldest_victims():
+    """ttl_storm: the deterministic wave schedule emits contiguous upsert
+    waves then delete storms, and every delete storm expires the OLDEST
+    live keys (TTL order), not popular ones."""
+    spec = PRESETS["ttl_storm"].scaled(n_ops=1280, batch_size=64, seed=5)
+    batches = generate_stream(spec, UNIVERSE)
+    ops = [b.op for b in batches]
+    # wave apportionment of (0.2, 0.5, 0.3) over wave_len=10
+    assert ops[:10] == ["lookup"] * 2 + ["upsert"] * 5 + ["delete"] * 3
+    age = list(UNIVERSE.tolist())                   # oldest-first live list
+    saw_delete = False
+    for b in batches:
+        if b.op == "upsert":
+            age.extend(k for k in b.keys.tolist() if k not in set(age))
+        elif b.op == "delete":
+            saw_delete = True
+            want = set(np.sort(np.asarray(age[: len(b.keys)])).tolist())
+            assert set(b.keys.tolist()) == want     # exactly the oldest
+            age = [k for k in age if k not in want]
+    assert saw_delete
+
+
+def test_spec_scenario_field_validation():
+    with pytest.raises(ValueError, match="delete_policy"):
+        WorkloadSpec(delete_policy="newest")
+    with pytest.raises(ValueError, match="shift_frac"):
+        WorkloadSpec(shift_frac=1.0)
+    with pytest.raises(ValueError, match="wave_len"):
+        WorkloadSpec(wave_len=-1)
+
+
 # ---------------------------------------------------------------------------
 # oracle
 # ---------------------------------------------------------------------------
@@ -199,7 +255,12 @@ def test_oracle_range_padding_conventions():
 # per-engine sizing: the contract is identical; the pallas interpret-mode
 # kernel and the mesh collectives just pay more per batch on CPU
 GRID_SIZES = {"local": (1500, 64), "pallas": (600, 64), "sharded": (480, 32)}
-GRID_PRESETS = ("ycsb_a", "ycsb_e", "dili_paper")
+GRID_PRESETS = ("ycsb_a", "ycsb_e", "dili_paper",
+                "shift_fb_logn", "ttl_storm")
+# the PR-5 scenario presets replay with the adaptive maintenance pipeline
+# on (incremental splice-flatten + drift/tombstone retrains) — the grid is
+# what pins its exactness engine-by-engine
+MAINT_PRESETS = ("shift_fb_logn", "ttl_storm")
 
 
 @pytest.mark.parametrize("engine", ENGINES)
@@ -211,7 +272,9 @@ def test_differential_grid(engine, preset):
     n_ops, bs = GRID_SIZES[engine]
     spec = PRESETS[preset].scaled(n_ops=n_ops, batch_size=bs, seed=13)
     ix = LearnedIndex.build(UNIVERSE, config=IndexConfig(
-        engine=engine, overlay_cap=512))
+        engine=engine, overlay_cap=512,
+        maintenance=(MaintenanceConfig()
+                     if preset in MAINT_PRESETS else None)))
     report = WorkloadRunner(ix).run(generate_stream(spec, UNIVERSE),
                                     spec=spec)
     assert report.divergences == []
