@@ -49,6 +49,11 @@ from repro.core.flat import flatten                     # noqa: E402
 # engine under test for the facade sections / --pr2-json (set by --engine)
 ENGINE = "local"
 
+# --metrics-json: when set, workload runs build with telemetry enabled and
+# their `LearnedIndex.metrics()` snapshots collect here, one per section
+METRICS_JSON = ""
+METRICS_SECTIONS: dict = {}
+
 
 def _dili_lookup_time(name: str, **kw) -> tuple[float, dict]:
     keys, d, f, idx = dili_for(name, **kw)
@@ -443,16 +448,16 @@ def _maint_config(mode: str):
 
 
 def _latency_percentiles(timings: list[dict]) -> dict:
-    """merge/publish wall-time percentiles (ms) over the run's merges."""
+    """merge/publish wall-time percentiles (ms) over the run's merges, via
+    the repo's ONE percentile recipe (`repro.obs.latency_summary`) — same
+    keys/method as the runner's `latency_ms` and `metrics()` histograms."""
+    from repro.obs import latency_summary
     if not timings:
         return dict(n_publishes=0)
     out: dict = dict(n_publishes=len(timings))
     for field in ("merge_s", "publish_s"):
-        xs = np.array([t[field] for t in timings]) * 1e3
-        key = field[:-2]                      # merge_s -> merge
-        out[f"{key}_ms_p50"] = float(np.percentile(xs, 50))
-        out[f"{key}_ms_p95"] = float(np.percentile(xs, 95))
-        out[f"{key}_ms_max"] = float(xs.max())
+        out.update(latency_summary((t[field] for t in timings),
+                                   prefix=field[:-2]))  # merge_s -> merge
     out["dirty_row_fraction_mean"] = float(
         np.mean([t["dirty_frac"] for t in timings]))
     return out
@@ -491,7 +496,8 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
         # overlay -> merge -> republish lifecycle, not pile into the overlay
         ix = LearnedIndex.build(keys, config=IndexConfig(
             engine=ENGINE, sample_stride=4, overlay_cap=8192,
-            maintenance=_maint_config(mode)))
+            maintenance=_maint_config(mode),
+            telemetry=bool(METRICS_JSON)))
         rep = WorkloadRunner(ix).run(generate_stream(spec, keys), spec=spec)
         d = rep.to_json_dict()
         d["maintenance"] = mode
@@ -512,6 +518,11 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
         d.update(_latency_percentiles(ix.maint_timings()))
         d["n_retrains"] = st["n_retrains"]
         d["n_incremental_flattens"] = st["n_incremental_flattens"]
+        # retrace watchdog: the runner marked warm after its warmup
+        # batches, so any later trace is a regression (the PR-4 bug class)
+        m = ix.metrics()
+        d["post_warmup_retraces"] = m["retrace"]["post_warmup_traces"]
+        d["retraces_per_1k_ops"] = m["retrace"]["retraces_per_1k_ops"]
         ix.close()
         tag = f"workload,{preset}{suffix}"
         csv_row(f"{tag},{ENGINE},ops_per_s", d["ops_per_s"],
@@ -524,12 +535,16 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
                         1e6 * rep.op_seconds[op] / n, f"n={n}")
         if d.get("n_publishes"):
             csv_row(f"{tag},{ENGINE},merge_ms_p50", d["merge_ms_p50"],
-                    f"p95={d['merge_ms_p95']:.1f};max={d['merge_ms_max']:.1f}")
+                    f"p95={d['merge_ms_p95']:.1f};"
+                    f"p99={d['merge_ms_p99']:.1f};max={d['merge_ms_max']:.1f}")
             csv_row(f"{tag},{ENGINE},publish_ms_p50", d["publish_ms_p50"],
                     f"p95={d['publish_ms_p95']:.1f};"
+                    f"p99={d['publish_ms_p99']:.1f};"
                     f"max={d['publish_ms_max']:.1f};"
                     f"dirty={d['dirty_row_fraction_mean']:.3f}")
         sections[tag] = d
+        if METRICS_JSON:
+            METRICS_SECTIONS[tag] = m
     return sections
 
 
@@ -636,6 +651,11 @@ def main() -> None:
                          "through the --engine facade with oracle "
                          "checking; one workload,<preset> section each; "
                          "BENCH_WORKLOAD_OPS sizes them")
+    ap.add_argument("--metrics-json", default="",
+                    help="build --workload indexes with telemetry enabled "
+                         "and write their LearnedIndex.metrics() snapshots "
+                         "(per-op histograms, merge-pipeline spans, retrace "
+                         "watchdog) here, keyed by workload section")
     ap.add_argument("--maintenance", default="off",
                     choices=("off", "incremental", "background", "compare"),
                     help="merge pipeline for --workload runs: legacy full "
@@ -645,8 +665,9 @@ def main() -> None:
                          "incremental back-to-back (records the latency "
                          "delta; what BENCH_PR2.json is emitted with)")
     args = ap.parse_args()
-    global ENGINE
+    global ENGINE, METRICS_JSON
     ENGINE = args.engine
+    METRICS_JSON = args.metrics_json
     if args.only or not (args.pr2_json or args.workload):
         for fn in ALL:
             if args.only and args.only not in fn.__name__:
@@ -659,6 +680,11 @@ def main() -> None:
                                               args.maintenance))
     if args.pr2_json:
         bench_pr2(args.pr2_json, extra_sections=wl_sections)
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as fh:
+            json.dump(dict(engine=ENGINE, schema="dili.metrics/1",
+                           sections=METRICS_SECTIONS), fh, indent=1)
+        print(f"# wrote {args.metrics_json}")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(dict(n_queries=N_QUERIES, rows=ROWS), fh, indent=1)

@@ -63,6 +63,11 @@ class IndexConfig:
                         jax 0.4.x shard_map has no while_loop replication
                         rule — and the kernel path is fixed-trip by design).
     max_hits          : default per-query range-window bound.
+    telemetry         : enable per-op latency histograms + merge-pipeline
+                        trace spans (`repro.obs`, DESIGN.md section 13).
+                        Off by default: the hot path then pays one flag
+                        check per facade call; retrace accounting stays
+                        live either way (it rides jax's compile hooks).
 
     `pad` applies to the local/pallas snapshots; the sharded engine's
     stacked per-shard tables are always pow2-padded (republish without
@@ -84,6 +89,7 @@ class IndexConfig:
     vmem_budget_bytes: int = 12 * 1024 * 1024
     early_exit: bool = True
     max_hits: int = 128
+    telemetry: bool = False
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -130,6 +136,7 @@ class IndexConfig:
             vmem_budget_bytes=self.vmem_budget_bytes,
             early_exit=self.early_exit,
             max_hits=self.max_hits,
+            telemetry=self.telemetry,
         )
 
     @classmethod

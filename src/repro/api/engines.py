@@ -40,6 +40,7 @@ from ..core.distributed import (build_sharded, combined_overlay_arrays,
 from ..core.flat import flatten, merge_sorted_runs
 from ..maintain import (IncrementalFlattener, LeafAccounting,
                         fold_with_accounting, run_retrains)
+from ..obs import Telemetry, watchdog
 from ..online.merge import OnlineIndex, adjust_pressure
 from ..online.overlay import (TombstoneOverlay, fold_overlay,
                               overlay_device_arrays)
@@ -139,6 +140,69 @@ def _maint_summary(*, n_full: int, n_incremental: int, n_retrains: int,
                 maint_queue_depth=queue_depth, maint_errors=errors)
 
 
+class EngineTelemetryBase:
+    """Shared `stats()` / `maint_timings()` / `metrics()` for every engine.
+
+    The three engines used to carry near-identical copies of the stats
+    dict assembly; this base composes the engine-independent pieces —
+    `_overlay_summary`, the `_maint_summary` maintenance counters, and
+    the telemetry accounting — from five small per-engine hooks:
+
+      _stats_extra()      engine-specific keys (snapshot sizing, shard
+                          breakdowns, kernel eligibility, ...)
+      _stats_overlays()   the overlay objects summarized for pending-write
+                          accounting (deduped during background merges)
+      _timing_rows()      per-merge wall-time rows (build publish excluded)
+      _queue_depth()      background scheduler depth (0 without one)
+      _maint_error_list() background task failures (empty without one)
+
+    Engines must also expose: name, epoch, telemetry, n_flattens,
+    n_merges, n_full_flattens, n_incremental_flattens, n_retrains,
+    last_dirty_frac.
+    """
+
+    telemetry: Telemetry
+
+    def _stats_extra(self) -> dict:
+        return {}
+
+    def _queue_depth(self) -> int:
+        return 0
+
+    def _maint_error_list(self) -> list:
+        return []
+
+    def close(self) -> None:
+        pass
+
+    def stats(self) -> dict:
+        errors = self._maint_error_list()
+        return dict(engine=self.name, epoch=self.epoch,
+                    **self._stats_extra(),
+                    **_overlay_summary(self._stats_overlays()),
+                    n_flattens=self.n_flattens, n_merges=self.n_merges,
+                    **_maint_summary(
+                        n_full=self.n_full_flattens,
+                        n_incremental=self.n_incremental_flattens,
+                        n_retrains=self.n_retrains,
+                        dirty_row_fraction=self.last_dirty_frac,
+                        queue_depth=self._queue_depth(),
+                        errors=len(errors)),
+                    maint_error_logs=list(errors),
+                    telemetry_enabled=self.telemetry.enabled,
+                    ops_total=self.telemetry.ops_total)
+
+    def maint_timings(self) -> list[dict]:
+        """Per-merge wall times: merge_s (fold+retrain+flatten),
+        publish_s (upload+flip), incremental, dirty_frac."""
+        return self._timing_rows()
+
+    def metrics(self) -> dict:
+        """The stable JSON-able telemetry snapshot (same schema on every
+        engine; DESIGN.md section 13)."""
+        return dict(engine=self.name, **self.telemetry.snapshot())
+
+
 def _reject_background(cfg: IndexConfig, engine: str) -> None:
     if cfg.maintenance is not None and cfg.maintenance.background:
         raise ValueError(
@@ -192,6 +256,9 @@ def _pair_table_recheck(pk, pv, q, v, f):
     return jnp.where(f, v, jnp.where(hit, pv[i], v)), f | hit
 
 
+watchdog.register_jit("api.pair_table_recheck", _pair_table_recheck)
+
+
 def _tombstone_headroom(ov_k, ov_t, lo, hi) -> int:
     """Extra snapshot rows the device window must fetch so that dropping
     tombstoned keys still leaves `max_hits` live candidates: the maximum
@@ -241,7 +308,7 @@ def _overlay_exact_range(entries, lo, hi, max_hits: int, device_range):
 # ---------------------------------------------------------------------------
 
 
-class LocalEngine:
+class LocalEngine(EngineTelemetryBase):
     """Single-process engine over the online-update lifecycle: writes land
     in the tombstone overlay, reads are ONE fused device dispatch, merges
     follow the configured `MergePolicy` (DESIGN.md section 8-9)."""
@@ -250,11 +317,13 @@ class LocalEngine:
 
     def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
         self.cfg = cfg
+        self.telemetry = Telemetry(enabled=cfg.telemetry)
         self.oi = OnlineIndex(keys, vals, policy=cfg.merge,
                               overlay_cap=cfg.overlay_cap,
                               dtype=cfg.resolved_dtype, pad=cfg.pad,
                               early_exit=cfg.early_exit,
                               maintenance=cfg.maintenance,
+                              telemetry=self.telemetry,
                               **cfg.bulk_load_kw())
 
     # -- reads --------------------------------------------------------------
@@ -319,38 +388,48 @@ class LocalEngine:
     def n_merges(self) -> int:
         return self.oi.n_merges
 
-    def maint_timings(self) -> list[dict]:
-        """Per-epoch merge/publish wall times (skipping the build epoch) —
-        the source of the benchmark latency percentiles."""
+    @property
+    def n_full_flattens(self) -> int:
+        return self.oi.n_full_flattens
+
+    @property
+    def n_incremental_flattens(self) -> int:
+        return self.oi.n_incremental_flattens
+
+    @property
+    def n_retrains(self) -> int:
+        return self.oi.n_retrains
+
+    @property
+    def last_dirty_frac(self) -> float:
+        return self.oi.last_dirty_frac
+
+    def _timing_rows(self) -> list[dict]:
         return [dict(merge_s=st.merge_s, publish_s=st.publish_s,
                      incremental=st.incremental, dirty_frac=st.dirty_frac)
                 for st in self.oi.store.history[1:]]
 
-    def stats(self) -> dict:
-        snap = self.oi.store.idx
-        oi = self.oi
-        pend = oi._merging
+    def _stats_overlays(self):
         # during an in-flight background merge, summarize the DEDUPED view
         # (a key rewritten after the freeze lives in both overlays but is
         # one distinct pending key — _overlay_summary's contract)
-        overlays = ([oi.overlay] if pend is None
-                    else [pend.merged_with(oi.overlay)])
-        sched = oi.scheduler
-        return dict(engine=self.name, epoch=oi.epoch,
-                    max_depth=snap.max_depth,
-                    snapshot_keys=int(oi.store.flat.n_pairs),
-                    **_overlay_summary(overlays),
-                    n_flattens=self.n_flattens, n_merges=self.n_merges,
-                    merge_reasons=dict(oi.merge_reasons),
-                    **_maint_summary(
-                        n_full=oi.n_full_flattens,
-                        n_incremental=oi.n_incremental_flattens,
-                        n_retrains=oi.n_retrains,
-                        dirty_row_fraction=oi.last_dirty_frac,
-                        queue_depth=0 if sched is None else sched.depth,
-                        errors=0 if sched is None else len(sched.errors)),
-                    maint_error_logs=([] if sched is None
-                                      else list(sched.errors)),
+        oi = self.oi
+        pend = oi._merging
+        return [oi.overlay] if pend is None else [pend.merged_with(oi.overlay)]
+
+    def _queue_depth(self) -> int:
+        sched = self.oi.scheduler
+        return 0 if sched is None else sched.depth
+
+    def _maint_error_list(self) -> list:
+        sched = self.oi.scheduler
+        return [] if sched is None else list(sched.errors)
+
+    def _stats_extra(self) -> dict:
+        snap = self.oi.store.idx
+        return dict(max_depth=snap.max_depth,
+                    snapshot_keys=int(self.oi.store.flat.n_pairs),
+                    merge_reasons=dict(self.oi.merge_reasons),
                     device_bytes=snap.nbytes)
 
 
@@ -359,7 +438,7 @@ class LocalEngine:
 # ---------------------------------------------------------------------------
 
 
-class PallasEngine:
+class PallasEngine(EngineTelemetryBase):
     """f32 kernel engine: lookups dispatch to the Pallas kernel when the
     tables fit the configured VMEM budget (XLA fallback otherwise / for
     flagged lanes), ranges bisect an f32 `DeviceSnapshot`.  Keys are
@@ -372,6 +451,7 @@ class PallasEngine:
         from ..kernels import ops as K
         self._K = K
         self.cfg = cfg
+        self.telemetry = Telemetry(enabled=cfg.telemetry)
         _reject_background(cfg, self.name)
         m = cfg.maintenance
         self.flattener = (IncrementalFlattener()
@@ -425,32 +505,36 @@ class PallasEngine:
 
     def _publish(self, merge_s: float = 0.0):
         t0 = time.perf_counter()
-        if self.flattener is not None:
-            self.flat = self.flattener.flatten(self.dili,
-                                               self.dili.take_dirty())
-            incremental = self.flattener.last_incremental
-            self.last_dirty_frac = (self.flattener.last_dirty_rows
-                                    / max(self.flattener.last_total_rows, 1))
-        else:
-            self.flat = flatten(self.dili)
-            self.dili.take_dirty()     # drain (unbounded growth otherwise)
-            incremental = False
-            self.last_dirty_frac = 1.0
+        with self.telemetry.span("merge.flatten"):
+            if self.flattener is not None:
+                self.flat = self.flattener.flatten(self.dili,
+                                                   self.dili.take_dirty())
+                incremental = self.flattener.last_incremental
+                self.last_dirty_frac = (
+                    self.flattener.last_dirty_rows
+                    / max(self.flattener.last_total_rows, 1))
+            else:
+                self.flat = flatten(self.dili)
+                self.dili.take_dirty()  # drain (unbounded growth otherwise)
+                incremental = False
+                self.last_dirty_frac = 1.0
         merge_s += time.perf_counter() - t0
         t0 = time.perf_counter()
-        self.arrs = self._K.kernel_arrays(self.flat)
-        self.snap = DeviceSnapshot.from_flat(self.flat, dtype=jnp.float32,
-                                             pad=self.cfg.pad)
-        jax.block_until_ready(self.snap.arrays)
+        with self.telemetry.span("merge.publish"):
+            self.arrs = self._K.kernel_arrays(self.flat)
+            self.snap = DeviceSnapshot.from_flat(self.flat, dtype=jnp.float32,
+                                                 pad=self.cfg.pad)
+            jax.block_until_ready(self.snap.arrays)
         self.n_flattens += 1
         if incremental:
             self.n_incremental_flattens += 1
         else:
             self.n_full_flattens += 1
-        self._timings.append(dict(merge_s=merge_s,
-                                  publish_s=time.perf_counter() - t0,
-                                  incremental=incremental,
-                                  dirty_frac=self.last_dirty_frac))
+        if self.epoch > 0:          # the build publish is not a merge row
+            self._timings.append(dict(merge_s=merge_s,
+                                      publish_s=time.perf_counter() - t0,
+                                      incremental=incremental,
+                                      dirty_frac=self.last_dirty_frac))
         self.epoch += 1
 
     # -- reads --------------------------------------------------------------
@@ -527,15 +611,20 @@ class PallasEngine:
         if self.overlay.count == 0:
             return
         t0 = time.perf_counter()
+        tel = self.telemetry
         # the host walk (and any retrain's bulk_load) must place slots in
         # the same f32 arithmetic the kernel searches with
         with placement_dtype(np.float32):
             if self.accounting is not None:
-                fold_with_accounting(self.dili, self.overlay,
-                                     self.accounting)
-                self.n_retrains += run_retrains(self.dili, self.accounting)
+                with tel.span("merge.fold"):
+                    fold_with_accounting(self.dili, self.overlay,
+                                         self.accounting)
+                with tel.span("merge.retrain"):
+                    self.n_retrains += run_retrains(self.dili,
+                                                    self.accounting)
             else:
-                fold_overlay(self.dili, self.overlay)
+                with tel.span("merge.fold"):
+                    fold_overlay(self.dili, self.overlay)
         self.overlay = TombstoneOverlay.empty(self.cfg.overlay_cap)
         self._ov_mirror = None
         self.n_merges += 1
@@ -558,23 +647,15 @@ class PallasEngine:
     def snapshot(self):
         return self.snap
 
-    def close(self):
-        pass
+    def _timing_rows(self) -> list[dict]:
+        return list(self._timings)
 
-    def maint_timings(self) -> list[dict]:
-        return self._timings[1:]        # skip the build publish
+    def _stats_overlays(self):
+        return [self.overlay]
 
-    def stats(self) -> dict:
-        return dict(engine=self.name, epoch=self.epoch,
-                    max_depth=self.flat.max_depth,
+    def _stats_extra(self) -> dict:
+        return dict(max_depth=self.flat.max_depth,
                     snapshot_keys=int(self.flat.n_pairs),
-                    **_overlay_summary([self.overlay]),
-                    n_flattens=self.n_flattens, n_merges=self.n_merges,
-                    **_maint_summary(
-                        n_full=self.n_full_flattens,
-                        n_incremental=self.n_incremental_flattens,
-                        n_retrains=self.n_retrains,
-                        dirty_row_fraction=self.last_dirty_frac),
                     table_bytes=self._K.table_bytes(self.arrs),
                     kernel_eligible=(self._K.table_bytes(self.arrs)
                                      <= self.cfg.vmem_budget_bytes),
@@ -586,7 +667,7 @@ class PallasEngine:
 # ---------------------------------------------------------------------------
 
 
-class ShardedEngine:
+class ShardedEngine(EngineTelemetryBase):
     """Mesh engine: quantile range partitioning, per-shard tombstone
     overlays, collective lookups (gather or a2a) with in-shard overlay
     resolution, and single-shard merges + republish.  Query batches are
@@ -597,6 +678,7 @@ class ShardedEngine:
 
     def __init__(self, keys: np.ndarray, vals: np.ndarray, cfg: IndexConfig):
         self.cfg = cfg
+        self.telemetry = Telemetry(enabled=cfg.telemetry)
         _reject_background(cfg, self.name)
         n = cfg.n_shards or len(jax.devices())
         # every shard's bulk_load needs >= 2 keys, and the mesh cannot span
@@ -719,13 +801,27 @@ class ShardedEngine:
             self.flush()
 
     def _fold_shard(self, r: int, dili, ov) -> None:
+        # always the sharded_merge fold hook, so the per-shard fold (and
+        # any retrains) land as per-shard merge.fold/retrain spans
+        if self._accounting is None:
+            with self.telemetry.span("merge.fold", shard=r):
+                fold_overlay(dili, ov)
+            return
         acct = self._accounting[r]
-        fold_with_accounting(dili, ov, acct)
-        self.n_retrains += run_retrains(dili, acct)
+        with self.telemetry.span("merge.fold", shard=r):
+            fold_with_accounting(dili, ov, acct)
+        with self.telemetry.span("merge.retrain", shard=r):
+            self.n_retrains += run_retrains(dili, acct)
 
     def _flatten_shard(self, r: int, dili):
-        fl = self._flatteners[r]
-        flat = fl.flatten(dili, dili.take_dirty())
+        with self.telemetry.span("merge.flatten", shard=r):
+            if self._flatteners is None:
+                flat = flatten(dili)
+                dili.take_dirty()   # drain (a full flatten supersedes it)
+                self.n_full_flattens += 1
+                return flat
+            fl = self._flatteners[r]
+            flat = fl.flatten(dili, dili.take_dirty())
         if fl.last_incremental:
             self.n_incremental_flattens += 1
         else:
@@ -737,15 +833,12 @@ class ShardedEngine:
         copy.  (A policy trigger folds all pending shards too — the merge
         itself is still per-shard row rewrites, no global rebuild.)"""
         t0 = time.perf_counter()
-        merged = sharded_merge(
-            self.sd, max_fill=0.0,
-            fold_fn=self._fold_shard if self._accounting else None,
-            flatten_fn=self._flatten_shard if self._flatteners else None)
+        merged = sharded_merge(self.sd, max_fill=0.0,
+                               fold_fn=self._fold_shard,
+                               flatten_fn=self._flatten_shard)
         if merged:
             incremental = False
-            if self._flatteners is None:
-                self.n_full_flattens += len(merged)
-            else:
+            if self._flatteners is not None:
                 fls = [self._flatteners[r] for r in merged]
                 self.last_dirty_frac = (
                     sum(f.last_dirty_rows for f in fls)
@@ -759,9 +852,11 @@ class ShardedEngine:
             self._writes_since_publish = 0
             self._writes_since_pressure = 0
             t0 = time.perf_counter()
-            self.arrs = to_mesh(self.sd, self.mesh, axis=self.cfg.mesh_axis,
-                                dtype=self.cfg.resolved_dtype)
-            jax.block_until_ready(list(self.arrs.values()))
+            with self.telemetry.span("merge.publish", shards=len(merged)):
+                self.arrs = to_mesh(self.sd, self.mesh,
+                                    axis=self.cfg.mesh_axis,
+                                    dtype=self.cfg.resolved_dtype)
+                jax.block_until_ready(list(self.arrs.values()))
             self.n_publishes += 1
             self._timings.append(dict(
                 merge_s=merge_s, publish_s=time.perf_counter() - t0,
@@ -788,25 +883,17 @@ class ShardedEngine:
         # flush bumps it); `sd.epoch` (merge count) stays internal
         return self.n_publishes
 
-    def close(self):
-        pass
-
-    def maint_timings(self) -> list[dict]:
+    def _timing_rows(self) -> list[dict]:
         return list(self._timings)
 
-    def stats(self) -> dict:
-        return dict(engine=self.name, epoch=self.epoch,
-                    max_depth=self.sd.max_depth,
+    def _stats_overlays(self):
+        return self.sd.overlays
+
+    def _stats_extra(self) -> dict:
+        return dict(max_depth=self.sd.max_depth,
                     n_shards=self.sd.n_shards,
                     snapshot_keys=sum(int(f.n_pairs) for f in self.sd.flats),
-                    **_overlay_summary(self.sd.overlays),
                     per_shard_pending=[ov.count for ov in self.sd.overlays],
-                    n_flattens=self.n_flattens, n_merges=self.n_merges,
-                    **_maint_summary(
-                        n_full=self.n_full_flattens,
-                        n_incremental=self.n_incremental_flattens,
-                        n_retrains=self.n_retrains,
-                        dirty_row_fraction=self.last_dirty_frac),
                     n_publishes=self.n_publishes,
                     device_bytes=sum(int(np.prod(v.shape)) * v.dtype.itemsize
                                      for v in self.arrs.values()))

@@ -20,6 +20,7 @@ benchmarks, examples) composes with it unchanged.
 from __future__ import annotations
 
 import json
+import time
 from dataclasses import replace
 
 import numpy as np
@@ -69,6 +70,20 @@ class LearnedIndex:
 
     # -- reads ---------------------------------------------------------------
 
+    def _pad_batch(self, n: int) -> int:
+        """pow2 lane count for a batch of n queries (0 = don't pad).
+
+        With `config.pad` the facade pow2-pads query batches exactly like
+        the engines pow2-pad their tables, and for the same reason: a
+        compiled executable is keyed by shape, so serving a stream of
+        arbitrary batch lengths would re-trace per new length (the retrace
+        watchdog caught the runner's mixed workloads doing exactly this).
+        Padded lanes repeat a real query and are sliced off the result —
+        at most 2x lane work for a bounded, log-sized executable set."""
+        if not self.config.pad or n == 0:
+            return 0
+        return 1 << max(6, (n - 1).bit_length())     # >= 64 lanes
+
     def lookup(self, queries) -> tuple[np.ndarray, np.ndarray]:
         """Batched point lookups -> (vals int64, found bool); vals only
         valid where found."""
@@ -77,8 +92,20 @@ class LearnedIndex:
             # engines use +/-inf internally as padding/boundary sentinels;
             # a non-finite query would match them (engine-dependently)
             raise ValueError("queries must be finite")
-        v, f = self._engine.lookup(q)
-        return np.asarray(v, np.int64), np.asarray(f, bool)
+        n = len(q)
+        lanes = self._pad_batch(n)
+        if lanes > n:
+            q = np.concatenate([q, np.full(lanes - n, q[0])])
+        tel = self._engine.telemetry
+        if tel.enabled:
+            t0 = time.perf_counter()
+            v, f = self._engine.lookup(q)
+            tel.record_op("lookup", time.perf_counter() - t0, n)
+        else:
+            tel.count_ops(n)
+            v, f = self._engine.lookup(q)
+        return (np.asarray(v, np.int64)[:n],
+                np.asarray(f, bool)[:n])
 
     def range(self, lo, hi,
               max_hits: int | None = None
@@ -97,7 +124,22 @@ class LearnedIndex:
             max_hits = self.config.max_hits
         if max_hits < 1:
             raise ValueError(f"max_hits must be >= 1, got {max_hits}")
-        return self._engine.range(lo, hi, max_hits)
+        n = len(lo)
+        lanes = self._pad_batch(n)
+        if lanes > n:
+            lo = np.concatenate([lo, np.full(lanes - n, lo[0])])
+            hi = np.concatenate([hi, np.full(lanes - n, hi[0])])
+        tel = self._engine.telemetry
+        if tel.enabled:
+            t0 = time.perf_counter()
+            ks, vs, cnt = self._engine.range(lo, hi, max_hits)
+            tel.record_op("range", time.perf_counter() - t0, n)
+        else:
+            tel.count_ops(n)
+            ks, vs, cnt = self._engine.range(lo, hi, max_hits)
+        if lanes > n:
+            ks, vs, cnt = ks[:n], vs[:n], cnt[:n]
+        return ks, vs, cnt
 
     def get(self, key: float) -> int | None:
         """Host-side exact point read (overlay state wins)."""
@@ -113,20 +155,41 @@ class LearnedIndex:
             raise ValueError(f"{len(keys)} keys vs {len(vals)} vals")
         if not np.isfinite(keys).all():
             raise ValueError("keys must be finite")
-        self._engine.upsert(keys, vals)
+        tel = self._engine.telemetry
+        if tel.enabled:
+            t0 = time.perf_counter()
+            self._engine.upsert(keys, vals)
+            tel.record_op("upsert", time.perf_counter() - t0, len(keys))
+        else:
+            tel.count_ops(len(keys))
+            self._engine.upsert(keys, vals)
 
     def delete(self, keys) -> None:
         """Delete (Alg. 8 at merge time); visible immediately."""
         keys = np.atleast_1d(np.asarray(keys, np.float64))
         if not np.isfinite(keys).all():
             raise ValueError("keys must be finite")
-        self._engine.delete(keys)
+        tel = self._engine.telemetry
+        if tel.enabled:
+            t0 = time.perf_counter()
+            self._engine.delete(keys)
+            tel.record_op("delete", time.perf_counter() - t0, len(keys))
+        else:
+            tel.count_ops(len(keys))
+            self._engine.delete(keys)
 
     def flush(self) -> dict:
         """Fold every pending write through the host tree and republish;
         returns `stats()` afterwards.  With background maintenance this is
         the synchronous barrier (drains the worker first)."""
-        self._engine.flush()
+        tel = self._engine.telemetry
+        if tel.enabled:
+            t0 = time.perf_counter()
+            self._engine.flush()
+            tel.record_op("flush", time.perf_counter() - t0)
+        else:
+            tel.count_ops(1)
+            self._engine.flush()
         return self.stats()
 
     def close(self) -> None:
@@ -156,6 +219,20 @@ class LearnedIndex:
         """Per-merge wall times (merge_s fold+retrain+flatten, publish_s
         upload+flip, incremental, dirty_frac) — benchmark material."""
         return self._engine.maint_timings()
+
+    def metrics(self) -> dict:
+        """The stable JSON-able telemetry snapshot (DESIGN.md section 13):
+        per-op latency histograms, merge-pipeline span summaries, and the
+        retrace watchdog report.  Schema is identical across engines; with
+        `config.telemetry` off, histograms/spans are zero-count but op and
+        retrace accounting are still live."""
+        return self._engine.metrics()
+
+    @property
+    def telemetry(self):
+        """The engine's `repro.obs.Telemetry` bundle (e.g. for
+        `mark_warm()` after a benchmark warmup phase)."""
+        return self._engine.telemetry
 
     @property
     def engine(self) -> str:

@@ -6,13 +6,9 @@ from __future__ import annotations
 import importlib
 
 ARCHS = [
-    "falcon_mamba_7b",
-    "zamba2_1p2b",
     "whisper_base",
-    "command_r_plus_104b",
     "gemma2_2b",
     "granite_8b",
-    "phi3_medium_14b",
     "internvl2_1b",
     "granite_moe_1b_a400m",
     "grok_1_314b",
@@ -20,13 +16,9 @@ ARCHS = [
 
 _ALIAS = {a.replace("_", "-"): a for a in ARCHS}
 _ALIAS.update({
-    "falcon-mamba-7b": "falcon_mamba_7b",
-    "zamba2-1.2b": "zamba2_1p2b",
     "whisper-base": "whisper_base",
-    "command-r-plus-104b": "command_r_plus_104b",
     "gemma2-2b": "gemma2_2b",
     "granite-8b": "granite_8b",
-    "phi3-medium-14b": "phi3_medium_14b",
     "internvl2-1b": "internvl2_1b",
     "granite-moe-1b-a400m": "granite_moe_1b_a400m",
     "grok-1-314b": "grok_1_314b",

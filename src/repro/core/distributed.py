@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import watchdog
 from .bu_tree import CostModel, DEFAULT_COST
 from .dili import bulk_load
 from .flat import FlatDILI, flatten
@@ -186,6 +187,24 @@ def _cached_collective(key, make):
     else:
         _TRACE_CACHE.move_to_end(key)
     return fn
+
+
+def _collective_cache_sizes() -> dict:
+    """Watchdog view of the collective trace cache: entry count plus total
+    traced executables across entries.  A per-batch growth here is exactly
+    the PR-4 bug class (fresh shard_map closure per call => re-trace)."""
+    total = 0
+    for fn in _TRACE_CACHE.values():
+        try:
+            total += fn._cache_size()
+        except Exception:
+            pass
+    return {"distributed.collective_cache_entries": len(_TRACE_CACHE),
+            "distributed.collective_executables": total}
+
+
+watchdog.register_jit_provider("distributed.collectives",
+                               _collective_cache_sizes)
 
 
 def sharded_lookup(mesh: Mesh, sd_arrays: dict, queries: jnp.ndarray,

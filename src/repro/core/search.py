@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import watchdog
 from .flat import TAG_CHILD, TAG_EMPTY, TAG_PAIR, DeltaOverlay, FlatDILI
 
 def predict_slot(a, b, q, fo):
@@ -451,6 +452,16 @@ def range_query_batch(idx: dict, lo: jnp.ndarray, hi: jnp.ndarray,
     idx = as_snapshot_dict(idx)
     idx = {k: idx[k] for k in ("pair_key", "pair_val")}
     return _range_query(idx, lo, hi, max_hits=max_hits)
+
+
+# retrace watchdog: expose per-entry-point traced-executable counts so
+# `metrics()["retrace"]["jit_cache_entries"]` can attribute a retrace storm
+# to the executable that grew (DESIGN.md section 13)
+watchdog.register_jit("search.search_batch", _search_batch)
+watchdog.register_jit("search.overlay_lookup", overlay_lookup)
+watchdog.register_jit("search.search_with_overlay", _swo)
+watchdog.register_jit("search.search_with_overlay_donated", _swo_donated)
+watchdog.register_jit("search.range_query", _range_query)
 
 
 # ---------------------------------------------------------------------------

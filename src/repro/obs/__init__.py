@@ -1,0 +1,21 @@
+"""Telemetry core (DESIGN.md section 13): unified metrics registry,
+merge-pipeline trace spans, and the retrace/recompile watchdog.
+
+This is the instrumentation contract everything reports through:
+engines carry a `Telemetry`, the facade times ops into it,
+`OnlineIndex`/the engines trace their merge pipelines with the fixed
+`MERGE_SPANS` taxonomy, and `benchmarks/run.py --metrics-json` exports
+`LearnedIndex.metrics()` snapshots per workload section.
+"""
+
+from .metrics import (LatencyHistogram, MetricsRegistry, PERCENTILES,
+                      latency_summary)
+from .telemetry import NULL_TELEMETRY, OPS, SCHEMA_VERSION, Telemetry
+from .tracing import MERGE_SPANS, Span, SpanRecorder
+from . import watchdog
+
+__all__ = [
+    "LatencyHistogram", "MetricsRegistry", "PERCENTILES", "latency_summary",
+    "NULL_TELEMETRY", "OPS", "SCHEMA_VERSION", "Telemetry",
+    "MERGE_SPANS", "Span", "SpanRecorder", "watchdog",
+]

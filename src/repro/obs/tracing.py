@@ -1,0 +1,79 @@
+"""Trace spans over the merge pipeline (DESIGN.md section 13).
+
+A span is one timed stage of a pipeline run: `(name, t0, dur_s, attrs)`.
+The recorder keeps a bounded ring of recent spans (for debugging "what did
+the last merge do") plus running per-name duration lists (for percentile
+export), and is safe for the one-writer-plus-maintenance-worker threading
+model the merge pipeline already guarantees: each span is recorded by
+whichever single thread ran that stage, and list.append is atomic.
+
+The merge span taxonomy is fixed (`MERGE_SPANS`) so every engine exports
+the same span names:
+
+  merge.queue_wait   — submit -> worker pickup (background scheduler only)
+  merge.fold         — overlay fold through the host tree (Alg. 7/8)
+  merge.retrain      — drift/tombstone-triggered subtree rebuilds
+  merge.flatten      — full or incremental-splice flatten
+  merge.publish      — device upload + epoch flip
+  merge.frozen_dwell — overlay freeze -> frozen drop (reads resolve the
+                       frozen overlay for this long; background only)
+
+Engines that run a stage synchronously inside another (e.g. the sharded
+engine's per-shard fold) record one span per shard with a `shard` attr.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+from .metrics import latency_summary
+
+MERGE_SPANS = ("merge.queue_wait", "merge.fold", "merge.retrain",
+               "merge.flatten", "merge.publish", "merge.frozen_dwell")
+
+
+@dataclass(frozen=True)
+class Span:
+    name: str
+    t0: float                  # perf_counter timestamp at stage start
+    dur_s: float
+    attrs: dict = field(default_factory=dict)
+
+
+class SpanRecorder:
+    """Bounded span ring + per-name duration accumulators."""
+
+    def __init__(self, maxlen: int = 2048,
+                 declare: tuple[str, ...] = MERGE_SPANS):
+        self.ring: deque[Span] = deque(maxlen=maxlen)
+        self._durations: dict[str, list[float]] = {n: [] for n in declare}
+
+    def record(self, name: str, dur_s: float, t0: float | None = None,
+               **attrs) -> None:
+        if t0 is None:
+            t0 = time.perf_counter() - dur_s
+        self.ring.append(Span(name, t0, dur_s, attrs))
+        self._durations.setdefault(name, []).append(dur_s)
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(name, time.perf_counter() - t0, t0=t0, **attrs)
+
+    def spans(self, name: str | None = None) -> list[Span]:
+        return [s for s in self.ring if name is None or s.name == name]
+
+    def count(self, name: str) -> int:
+        return len(self._durations.get(name, ()))
+
+    def summary(self) -> dict:
+        """{span name: shared percentile summary} over every declared or
+        recorded span name — JSON-able, stable key set per taxonomy."""
+        return {name: latency_summary(durs)
+                for name, durs in sorted(self._durations.items())}

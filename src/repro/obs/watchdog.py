@@ -1,0 +1,122 @@
+"""Retrace/recompile watchdog (DESIGN.md section 13).
+
+The worst perf-bug class this repo has hit is the silent retrace: PR 4
+found the sharded collectives re-tracing their shard_map EVERY batch
+(~50x per-batch cost) because a fresh closure was jitted per call.  The
+jit caches hide this completely — results stay correct, only wall time
+explodes — so the watchdog turns it into a number:
+
+  * process-global trace/compile counters fed by `jax.monitoring`'s
+    compile-event hooks (one int increment per trace — nothing on the op
+    hot path, which never traces after warmup);
+  * a registry of named jitted entry points (`register_jit`) and cache
+    providers (`register_jit_provider`) so `jit_cache_sizes()` can report
+    traced-executable counts per entry point;
+  * `TraceMark` deltas: snapshot the counters at build and after warmup,
+    and any post-warmup growth is a retrace regression
+    (`retraces_per_1k_ops` is the failing number CI asserts on).
+
+Counters are process-wide: deltas attribute every trace in the window to
+the index being measured, so measure one index at a time (exactly what
+the workload runner and CI do).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_counts = {"traces": 0, "compiles": 0}
+_installed = False
+_install_lock = threading.Lock()
+
+
+def _on_compile_event(event: str, duration_secs: float, **kw) -> None:
+    # racy += is tolerable for a monotone diagnostic counter only if it
+    # never loses the increments we assert on; traces happen on the one
+    # writer/worker thread in practice, but stay correct anyway
+    if event == TRACE_EVENT:
+        _counts["traces"] += 1
+    elif event == COMPILE_EVENT:
+        _counts["compiles"] += 1
+
+
+def install() -> None:
+    """Install the (idempotent, process-global) compile-event listener.
+    Registered once; jax offers no per-listener removal, so the hook
+    stays for the process lifetime — it is two dict increments per
+    TRACE, which only happens when an executable is minted."""
+    global _installed
+    with _install_lock:
+        if _installed:
+            return
+        import jax.monitoring
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_compile_event)
+        _installed = True
+
+
+def trace_counts() -> dict:
+    """Process-global {traces, compiles} so far (installs the hook)."""
+    install()
+    return dict(_counts)
+
+
+# -- named jit-cache registry -------------------------------------------------
+
+_JIT_REGISTRY: dict[str, object] = {}
+_PROVIDERS: dict[str, object] = {}
+
+
+def register_jit(name: str, fn) -> None:
+    """Register a module-level jitted callable under a stable name; its
+    `_cache_size()` (traced executables) shows up in `jit_cache_sizes`."""
+    _JIT_REGISTRY[name] = fn
+
+
+def register_jit_provider(name: str, provider) -> None:
+    """Register a zero-arg callable returning an int cache size — or a
+    {name: size} dict — for entry points whose jits are minted dynamically
+    (e.g. the sharded collective trace cache)."""
+    _PROVIDERS[name] = provider
+
+
+def jit_cache_sizes() -> dict:
+    """{entry point name: traced executables} for every registered jit."""
+    out: dict = {}
+    for name, fn in _JIT_REGISTRY.items():
+        size = getattr(fn, "_cache_size", None)
+        out[name] = int(size()) if callable(size) else -1
+    for name, provider in _PROVIDERS.items():
+        try:
+            got = provider()
+        except Exception:
+            out[name] = -1
+            continue
+        if isinstance(got, dict):
+            out.update({k: int(v) for k, v in got.items()})
+        else:
+            out[name] = int(got)
+    return dict(sorted(out.items()))
+
+
+# -- windowed deltas ----------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TraceMark:
+    traces: int
+    compiles: int
+
+    @classmethod
+    def now(cls) -> "TraceMark":
+        c = trace_counts()
+        return cls(traces=c["traces"], compiles=c["compiles"])
+
+    def delta(self) -> dict:
+        c = trace_counts()
+        return dict(traces=c["traces"] - self.traces,
+                    compiles=c["compiles"] - self.compiles)

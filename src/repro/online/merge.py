@@ -33,6 +33,7 @@ from ..core.flat import flatten
 from ..maintain import (IncrementalFlattener, LeafAccounting,
                         MaintenanceConfig, MaintenanceScheduler,
                         fold_with_accounting, run_retrains)
+from ..obs import NULL_TELEMETRY
 from .epoch import EpochStats, SnapshotStore
 from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
                       overlay_device_arrays)
@@ -100,10 +101,12 @@ class OnlineIndex:
                  policy: MergePolicy | None = None, overlay_cap: int = 4096,
                  dtype=jnp.float64, pad: bool = True, early_exit: bool = True,
                  maintenance: MaintenanceConfig | None = None,
+                 telemetry=None,
                  **bulk_kw):
         if dili is None:
             dili = bulk_load(np.asarray(keys, np.float64), vals, **bulk_kw)
         self.dili = dili
+        self.tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self.policy = policy or MergePolicy()
         self.early_exit = early_exit
         self.store = SnapshotStore(dtype=dtype, pad=pad)
@@ -239,6 +242,7 @@ class OnlineIndex:
             return self.store.stats
         frozen = self.overlay
         self._merging = frozen         # readers: live > frozen > snapshot
+        self._frozen_t0 = time.perf_counter()   # -> merge.frozen_dwell
         self.overlay = TombstoneOverlay.empty(self._overlay_cap0)
         # trigger-counter resets happen HERE, on the writer thread, at
         # freeze time: the frozen writes are on their way into the next
@@ -251,13 +255,14 @@ class OnlineIndex:
         self._leaf_hits = Counter()
         self._leaf_omega = {}
         self._unlocated_keys = []
+        t_sub = time.perf_counter()    # -> merge.queue_wait (submit -> start)
         if self.scheduler is not None and self.scheduler.submit(
-                lambda: self._merge_impl(frozen, reason, lag)):
+                lambda: self._merge_impl(frozen, reason, lag, t_sub)):
             return self.store.stats
-        return self._merge_impl(frozen, reason, lag)  # sync / closed worker
+        return self._merge_impl(frozen, reason, lag, t_sub)  # sync/closed
 
     def _merge_impl(self, frozen: TombstoneOverlay, reason: str,
-                    lag: int) -> EpochStats:
+                    lag: int, t_sub: float) -> EpochStats:
         """The merge pipeline: fold (+accounting) -> retrain -> flatten ->
         publish.  Runs on the caller's thread or the maintenance worker.
         On failure the frozen overlay STAYS installed (reads keep
@@ -267,19 +272,25 @@ class OnlineIndex:
         The worker never assigns self.overlay or the trigger counters —
         that would race the writer's own updates."""
         try:
-            return self._merge_steps(frozen, reason, lag)
+            return self._merge_steps(frozen, reason, lag, t_sub)
         except BaseException:
             self._merge_failed = True
             raise
 
     def _merge_steps(self, frozen: TombstoneOverlay, reason: str,
-                     lag: int) -> EpochStats:
+                     lag: int, t_sub: float) -> EpochStats:
         t0 = time.perf_counter()
+        self.tel.record_span("merge.queue_wait", t0 - t_sub, reason=reason)
         if self.accounting is not None:
-            fold_with_accounting(self.dili, frozen, self.accounting)
-            retrains = run_retrains(self.dili, self.accounting)
+            with self.tel.span("merge.fold", reason=reason,
+                               pending=frozen.count):
+                fold_with_accounting(self.dili, frozen, self.accounting)
+            with self.tel.span("merge.retrain"):
+                retrains = run_retrains(self.dili, self.accounting)
         else:
-            fold_overlay(self.dili, frozen)
+            with self.tel.span("merge.fold", reason=reason,
+                               pending=frozen.count):
+                fold_overlay(self.dili, frozen)
             retrains = 0
         merge_s = time.perf_counter() - t0
         self.n_merges += 1
@@ -291,21 +302,26 @@ class OnlineIndex:
         # drop the frozen overlay only AFTER the flip: between publish and
         # here readers re-apply already-folded entries — idempotent
         self._merging = None
+        self.tel.record_span("merge.frozen_dwell",
+                             time.perf_counter() - self._frozen_t0,
+                             reason=reason)
         return st
 
     def _publish(self, overlay_fill: float = 0.0, merge_s: float = 0.0,
                  n_retrains: int = 0, merge_lag: int = 0) -> EpochStats:
         t0 = time.perf_counter()
-        if self.flattener is not None:
-            flat = self.flattener.flatten(self.dili, self.dili.take_dirty())
-            incremental = self.flattener.last_incremental
-            dirty_frac = (self.flattener.last_dirty_rows
-                          / max(self.flattener.last_total_rows, 1))
-        else:
-            flat = flatten(self.dili)  # the ONE (full) flatten per epoch
-            self.dili.take_dirty()     # drain: nothing is dirty relative
-            incremental = False        # to a fresh full materialization
-            dirty_frac = 1.0
+        with self.tel.span("merge.flatten"):
+            if self.flattener is not None:
+                flat = self.flattener.flatten(self.dili,
+                                              self.dili.take_dirty())
+                incremental = self.flattener.last_incremental
+                dirty_frac = (self.flattener.last_dirty_rows
+                              / max(self.flattener.last_total_rows, 1))
+            else:
+                flat = flatten(self.dili)  # the ONE full flatten per epoch
+                self.dili.take_dirty()     # drain: nothing is dirty vs a
+                incremental = False        # fresh full materialization
+                dirty_frac = 1.0
         merge_s += time.perf_counter() - t0
         self.n_flattens += 1
         if incremental:
@@ -313,11 +329,14 @@ class OnlineIndex:
         else:
             self.n_full_flattens += 1
         self.last_dirty_frac = dirty_frac
-        st = self.store.publish(flat, overlay_fill=overlay_fill,
-                                merge_lag=merge_lag,
-                                merge_s=merge_s, incremental=incremental,
-                                dirty_frac=dirty_frac,
-                                n_retrains=n_retrains)
+        with self.tel.span("merge.publish", epoch=self.store.epoch + 1):
+            st = self.store.publish(flat, overlay_fill=overlay_fill,
+                                    merge_lag=merge_lag,
+                                    merge_s=merge_s, incremental=incremental,
+                                    dirty_frac=dirty_frac,
+                                    n_retrains=n_retrains)
+        if st.retraced and self.tel.enabled:
+            self.tel.metrics.count("publish.retraced")
         return st
 
     def close(self) -> None:

@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import latency_summary
 from .generator import OPS, OpBatch, WorkloadSpec, stream_op_counts
 from .oracle import SortedOracle
 
@@ -45,8 +46,15 @@ class WorkloadReport:
     n_batches: int = 0
     op_counts: dict = field(default_factory=lambda: {o: 0 for o in OPS})
     op_seconds: dict = field(default_factory=lambda: {o: 0.0 for o in OPS})
+    # per-batch engine-call durations (seconds), captured off the clock —
+    # the tail-latency raw material behind `latency_ms` in the JSON report
+    op_latencies: dict = field(default_factory=lambda: {o: [] for o in OPS})
     divergences: list = field(default_factory=list)
     final_stats: dict = field(default_factory=dict)
+
+    def note_op(self, op: str, dur_s: float) -> None:
+        self.op_seconds[op] += dur_s
+        self.op_latencies[op].append(dur_s)
 
     @property
     def wall_s(self) -> float:
@@ -56,6 +64,11 @@ class WorkloadReport:
     def ops_per_s(self) -> float:
         return self.n_ops / max(self.wall_s, 1e-12)
 
+    def latency_ms(self) -> dict:
+        """{op: p50/p95/p99/p999/max/mean ms per engine batch call} via
+        the shared percentile recipe (`repro.obs.latency_summary`)."""
+        return {op: latency_summary(self.op_latencies[op]) for op in OPS}
+
     def to_json_dict(self) -> dict:
         return dict(name=self.name, engine=self.engine, n_ops=self.n_ops,
                     n_batches=self.n_batches, ops_per_s=self.ops_per_s,
@@ -63,6 +76,7 @@ class WorkloadReport:
                     op_counts=dict(self.op_counts),
                     op_seconds={k: round(v, 6)
                                 for k, v in self.op_seconds.items()},
+                    latency_ms=self.latency_ms(),
                     n_divergences=len(self.divergences),
                     divergences=self.divergences[:8],
                     pending_writes=self.final_stats.get("pending_writes"),
@@ -97,15 +111,22 @@ class WorkloadRunner:
     check=False turns the runner into a pure throughput driver (no oracle,
     no diffs) for perf sweeps where the keys are not exactly representable
     in the engine's dtype (the pallas engine quantizes to f32; the
-    differential contract requires the integer-key convention)."""
+    differential contract requires the integer-key convention).
+
+    `warmup_batches` marks the index's retrace watchdog warm after that
+    many replayed batches (`telemetry.mark_warm()`): every executable the
+    steady state needs should exist by then, so the report's post-warmup
+    trace count is a retrace regression signal, not compile noise."""
 
     def __init__(self, index, check: bool = True, strict: bool = True,
-                 verify_writes: bool = True, final_check: bool = True):
+                 verify_writes: bool = True, final_check: bool = True,
+                 warmup_batches: int = 8):
         self.index = index
         self.check = check
         self.strict = strict
         self.verify_writes = verify_writes and check
         self.final_check = final_check and check
+        self.warmup_batches = warmup_batches
         k, v = index.items()
         self.oracle = SortedOracle(k, v) if check else None
 
@@ -116,7 +137,7 @@ class WorkloadRunner:
         if b.op == "lookup":
             t0 = time.perf_counter()
             v, f = ix.lookup(b.keys)
-            report.op_seconds["lookup"] += time.perf_counter() - t0
+            report.note_op("lookup", time.perf_counter() - t0)
             if self.check:
                 wv, wf = oc.lookup(b.keys)
                 msgs = _diff(f"batch {i} lookup", (f, v[f]),
@@ -125,7 +146,7 @@ class WorkloadRunner:
         elif b.op == "upsert":
             t0 = time.perf_counter()
             ix.upsert(b.keys, b.vals)
-            report.op_seconds["upsert"] += time.perf_counter() - t0
+            report.note_op("upsert", time.perf_counter() - t0)
             if self.check:
                 oc.upsert(b.keys, b.vals)
                 if self.verify_writes:
@@ -136,7 +157,7 @@ class WorkloadRunner:
         elif b.op == "delete":
             t0 = time.perf_counter()
             ix.delete(b.keys)
-            report.op_seconds["delete"] += time.perf_counter() - t0
+            report.note_op("delete", time.perf_counter() - t0)
             if self.check:
                 oc.delete(b.keys)
                 if self.verify_writes:
@@ -150,11 +171,35 @@ class WorkloadRunner:
             mh = getattr(self, "_max_hits", 64)
             t0 = time.perf_counter()
             ks, vs, cnt = ix.range(b.lo, b.hi, max_hits=mh)
-            report.op_seconds["range"] += time.perf_counter() - t0
+            report.note_op("range", time.perf_counter() - t0)
             if self.check:
                 want = oc.range(b.lo, b.hi, max_hits=mh)
                 report.divergences += _diff(f"batch {i} range",
                                             (ks, vs, cnt), want)
+
+    def _prewarm_buckets(self, batches: list[OpBatch]) -> None:
+        """Mint every read-path executable the stream's batch lengths can
+        reach before declaring warmup over: one probe lookup (and range,
+        when the mix has ranges) per pow2 lane bucket the facade pads to.
+        Without this the stream's shorter tail batch hits a smaller pad
+        bucket AFTER mark_warm and the compile counts as a retrace."""
+        ix = self.index
+        pad = getattr(ix, "_pad_batch", None)
+        if pad is None:
+            return
+        buckets, has_range = set(), False
+        for b in batches:
+            if b.op == "range":
+                has_range = True
+                buckets.add(pad(len(b.lo)) or len(b.lo))
+            else:
+                buckets.add(pad(len(b.keys)) or len(b.keys))
+        k0 = float(ix.items()[0][0])
+        mh = getattr(self, "_max_hits", 64)
+        for n in sorted(buckets):
+            ix.lookup(np.full(n, k0))
+            if has_range:
+                ix.range(np.full(n, k0), np.full(n, k0), max_hits=mh)
 
     # -- the stream ----------------------------------------------------------
 
@@ -166,11 +211,16 @@ class WorkloadRunner:
             name=name or (spec.name if spec is not None else "stream"),
             engine=self.index.engine)
         report.op_counts = stream_op_counts(batches)
+        tel = getattr(self.index, "telemetry", None)
         for i, b in enumerate(batches):
             n_before = len(report.divergences)
             self._replay(i, b, report)
             report.n_batches += 1
             report.n_ops += b.n_ops
+            if (tel is not None and not tel.warmed
+                    and report.n_batches >= self.warmup_batches):
+                self._prewarm_buckets(batches)
+                tel.mark_warm()
             if self.strict and len(report.divergences) > n_before:
                 raise WorkloadDivergence(
                     f"{report.name} on engine {report.engine!r}: "
