@@ -548,6 +548,136 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
     return sections
 
 
+N_RECOVERY_RECORDS = int(os.environ.get("BENCH_RECOVERY_RECORDS", "10000"))
+
+
+def durability_bench() -> dict:
+    """Durability sections for BENCH_PR2.json (``--durability``), same
+    one-dict-per-section schema as every other extra section:
+
+      durability,wal_overhead   ycsb_a throughput with durability off vs
+                                fsync="interval" (overhead_frac: DESIGN.md
+                                section 14 targets <= 0.15)
+      durability,recovery       wall time to recover a checkpoint plus a
+                                BENCH_RECOVERY_RECORDS-record WAL tail,
+                                split into the recovery.load/replay spans
+      durability,kill_recover   ycsb_a replayed halfway, index abandoned
+                                (a SIGKILL's disk state), recovered, and
+                                the rest of the stream continued on the
+                                recovered index — oracle-checked, so any
+                                divergence raises and fails the run
+    """
+    import shutil
+    import tempfile
+    import time as _t
+    from repro.api import IndexConfig, LearnedIndex, manual_merge_policy
+    from repro.durability import DurabilityConfig
+    from repro.workloads import PRESETS, WorkloadRunner, generate_stream
+    keys = workload_universe()
+    spec = PRESETS["ycsb_a"].scaled(n_ops=N_WORKLOAD_OPS,
+                                    batch_size=N_WORKLOAD_BATCH)
+    root = tempfile.mkdtemp(prefix="dili_dur_bench_")
+    sections: dict = {}
+    try:
+        # -- WAL-append overhead: the same stream, throughput-only runner,
+        # durability off vs group-commit + interval fsync
+        print(f"# durability: ycsb_a WAL overhead on the '{ENGINE}' engine "
+              f"({spec.n_ops} ops, fsync=interval)")
+        ops_per_s: dict = {}
+        for label in ("warmup", "off", "interval"):
+            # checkpoint_every_merges=8: the section isolates the per-write
+            # WAL append + group-commit cost; the default every-merge
+            # cadence folds full-snapshot checkpoint writes into the same
+            # number (~3 merges in this stream => +40% at 300k keys),
+            # which the recovery section already prices separately
+            dur = None if label in ("warmup", "off") else DurabilityConfig(
+                dir=os.path.join(root, "overhead"), fsync="interval",
+                checkpoint_every_merges=8)
+            ix = LearnedIndex.build(keys, config=IndexConfig(
+                engine=ENGINE, sample_stride=4, overlay_cap=8192,
+                durability=dur))
+            rep = WorkloadRunner(ix, check=False).run(
+                generate_stream(spec, keys), spec=spec,
+                name=f"ycsb_a[durability={label}]")
+            ix.flush()
+            ix.close()
+            # the warmup pass exists to mint every executable the stream
+            # needs (process-wide jit cache) so neither timed leg pays
+            # compile costs; its throughput is discarded
+            ops_per_s[label] = rep.ops_per_s
+        overhead = 1.0 - ops_per_s["interval"] / ops_per_s["off"]
+        sections["durability,wal_overhead"] = dict(
+            preset="ycsb_a", engine=ENGINE, fsync="interval",
+            checkpoint_every_merges=8,
+            n_ops=spec.n_ops, base_ops_per_s=ops_per_s["off"],
+            durable_ops_per_s=ops_per_s["interval"],
+            overhead_frac=overhead)
+        csv_row(f"durability,wal_overhead,{ENGINE},ops_per_s",
+                ops_per_s["interval"],
+                f"base={ops_per_s['off']:.0f};"
+                f"overhead_frac={overhead:.3f};fsync=interval")
+        # -- recovery time: one checkpoint + an N_RECOVERY_RECORDS-record
+        # tail (manual merges: no publish, so nothing truncates the WAL)
+        print(f"# durability: recovery of a {N_RECOVERY_RECORDS}-record "
+              f"WAL tail on the '{ENGINE}' engine")
+        rdir = os.path.join(root, "recovery")
+        ix = LearnedIndex.build(keys, config=IndexConfig(
+            engine=ENGINE, sample_stride=4, overlay_cap=1 << 20,
+            merge=manual_merge_policy(),
+            durability=DurabilityConfig(dir=rdir, fsync="interval")))
+        rng = np.random.default_rng(21)
+        pool = keys[rng.integers(0, len(keys), 8192)]
+        for i in range(N_RECOVERY_RECORDS):
+            k = pool[(4 * i) % 8192: (4 * i) % 8192 + 4]
+            ix.upsert(k, np.full(len(k), i, np.int64))
+        ix.abandon()                 # no final fsync: a crash's disk state
+        t0 = _t.perf_counter()
+        rix = LearnedIndex.recover(rdir)
+        recovery_s = _t.perf_counter() - t0
+        m = rix.metrics()
+        spans = m["spans"]
+        sections["durability,recovery"] = dict(
+            engine=ENGINE, tail_records=N_RECOVERY_RECORDS,
+            recovery_s=recovery_s,
+            replayed_records=int(m["counters"]
+                                 ["recovery.replayed_records"]),
+            load_ms=spans["recovery.load"]["ms_mean"],
+            replay_ms=spans["recovery.replay"]["ms_mean"],
+            publish_ms=spans["recovery.publish"]["ms_mean"])
+        rix.close()
+        csv_row(f"durability,recovery,{ENGINE},recovery_s", recovery_s,
+                f"tail_records={N_RECOVERY_RECORDS};"
+                f"load_ms={spans['recovery.load']['ms_mean']:.1f};"
+                f"replay_ms={spans['recovery.replay']['ms_mean']:.1f}")
+        # -- kill-and-recover replay: differential, strict — divergence
+        # raises out of the benchmark run
+        print(f"# durability: ycsb_a kill-and-recover replay on the "
+              f"'{ENGINE}' engine (oracle-checked)")
+        ix = LearnedIndex.build(keys, config=IndexConfig(
+            engine=ENGINE, sample_stride=4, overlay_cap=8192,
+            durability=DurabilityConfig(
+                dir=os.path.join(root, "kill"), fsync="interval")))
+        runner = WorkloadRunner(ix)
+        batches = generate_stream(spec, keys)
+        kr = runner.run_kill_recover(batches, kill_at=len(batches) // 2,
+                                     spec=spec, name="ycsb_a")
+        runner.index.close()
+        sections["durability,kill_recover"] = dict(
+            engine=ENGINE, preset="ycsb_a",
+            kill_at_batch=kr["kill_at_batch"],
+            recovery_s=kr["recovery_s"],
+            replayed_records=kr["replayed_records"],
+            n_divergences=kr["n_divergences"])
+        csv_row(f"durability,kill_recover,{ENGINE},recovery_s",
+                kr["recovery_s"],
+                f"kill_at_batch={kr['kill_at_batch']};"
+                f"replayed={kr['replayed_records']};"
+                f"divergences={kr['n_divergences']}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return sections
+
+
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
        table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
@@ -651,6 +781,13 @@ def main() -> None:
                          "through the --engine facade with oracle "
                          "checking; one workload,<preset> section each; "
                          "BENCH_WORKLOAD_OPS sizes them")
+    ap.add_argument("--durability", action="store_true",
+                    help="measure the durability subsystem on --engine: "
+                         "ycsb_a WAL-append overhead (off vs "
+                         "fsync=interval), recovery time for a "
+                         "BENCH_RECOVERY_RECORDS-record WAL tail, and an "
+                         "oracle-checked kill-and-recover replay; three "
+                         "durability,* sections in BENCH_PR2.json")
     ap.add_argument("--metrics-json", default="",
                     help="build --workload indexes with telemetry enabled "
                          "and write their LearnedIndex.metrics() snapshots "
@@ -668,7 +805,7 @@ def main() -> None:
     global ENGINE, METRICS_JSON
     ENGINE = args.engine
     METRICS_JSON = args.metrics_json
-    if args.only or not (args.pr2_json or args.workload):
+    if args.only or not (args.pr2_json or args.workload or args.durability):
         for fn in ALL:
             if args.only and args.only not in fn.__name__:
                 continue
@@ -678,6 +815,8 @@ def main() -> None:
         for preset in args.workload.split(","):
             wl_sections.update(workload_bench(preset.strip(),
                                               args.maintenance))
+    if args.durability:
+        wl_sections.update(durability_bench())
     if args.pr2_json:
         bench_pr2(args.pr2_json, extra_sections=wl_sections)
     if args.metrics_json:

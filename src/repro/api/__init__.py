@@ -12,11 +12,13 @@ from .config import ENGINES, IndexConfig, manual_merge_policy
 from .engines import (ENGINE_CLASSES, Engine, LocalEngine, PallasEngine,
                       ShardedEngine)
 from .index import LearnedIndex
+from ..durability.config import DurabilityConfig
 from ..maintain import MaintenanceConfig
 from ..online.merge import MergePolicy
 
 __all__ = [
     "DeviceSnapshot",
+    "DurabilityConfig",
     "ENGINES",
     "ENGINE_CLASSES",
     "Engine",

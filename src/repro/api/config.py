@@ -15,6 +15,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from ..durability.config import DurabilityConfig
 from ..maintain import MaintenanceConfig
 from ..online.merge import MergePolicy
 
@@ -68,6 +69,13 @@ class IndexConfig:
                         Off by default: the hot path then pays one flag
                         check per facade call; retrace accounting stays
                         live either way (it rides jax's compile hooks).
+    durability        : `repro.durability.DurabilityConfig` arming the
+                        write-ahead log + checkpoint subsystem (DESIGN.md
+                        section 14): upserts/deletes append to a per-shard
+                        WAL before being acknowledged, merge publishes
+                        checkpoint + truncate it, `LearnedIndex.recover`
+                        replays the tail after a crash.  None (default) =
+                        in-memory only, no durability I/O.
 
     `pad` applies to the local/pallas snapshots; the sharded engine's
     stacked per-shard tables are always pow2-padded (republish without
@@ -90,6 +98,7 @@ class IndexConfig:
     early_exit: bool = True
     max_hits: int = 128
     telemetry: bool = False
+    durability: DurabilityConfig | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -137,6 +146,8 @@ class IndexConfig:
             early_exit=self.early_exit,
             max_hits=self.max_hits,
             telemetry=self.telemetry,
+            durability=(None if self.durability is None
+                        else self.durability.to_json_dict()),
         )
 
     @classmethod
@@ -146,7 +157,11 @@ class IndexConfig:
         maint = d.pop("maintenance", None)
         if maint is not None:
             maint = MaintenanceConfig.from_json_dict(maint)
+        dur = d.pop("durability", None)
+        if dur is not None:
+            dur = DurabilityConfig.from_json_dict(dur)
         dtype = d.pop("dtype")
         bulk_kw = tuple(tuple(kv) for kv in d.pop("bulk_kw", []))
-        return cls(merge=merge, maintenance=maint, bulk_kw=bulk_kw,
+        return cls(merge=merge, maintenance=maint, durability=dur,
+                   bulk_kw=bulk_kw,
                    dtype=None if dtype is None else np.dtype(dtype), **d)

@@ -172,8 +172,34 @@ class EngineTelemetryBase:
     def _maint_error_list(self) -> list:
         return []
 
+    def _maint_degraded(self) -> bool:
+        """Background retries exhausted -> merges run synchronously now
+        (only the local engine's scheduler path can degrade)."""
+        return False
+
     def close(self) -> None:
         pass
+
+    # -- durability hooks (DESIGN.md section 14) ------------------------------
+
+    #: shards the WAL fans out over (1 everywhere but the sharded engine)
+    n_wal_shards: int = 1
+
+    def shard_ids(self, keys: np.ndarray) -> np.ndarray:
+        """WAL shard routing for a write batch (all shard 0 on
+        single-shard engines)."""
+        return np.zeros(len(np.atleast_1d(keys)), np.int64)
+
+    _on_publish = None
+
+    def set_on_publish(self, cb) -> None:
+        """Register a post-merge-publish callback (the durability manager
+        checkpoints through it).  Runs on whichever thread published."""
+        self._on_publish = cb
+
+    def _notify_publish(self) -> None:
+        if self._on_publish is not None:
+            self._on_publish()
 
     def stats(self) -> dict:
         errors = self._maint_error_list()
@@ -188,6 +214,7 @@ class EngineTelemetryBase:
                         dirty_row_fraction=self.last_dirty_frac,
                         queue_depth=self._queue_depth(),
                         errors=len(errors)),
+                    maint_degraded=self._maint_degraded(),
                     maint_error_logs=list(errors),
                     telemetry_enabled=self.telemetry.enabled,
                     ops_total=self.telemetry.ops_total)
@@ -363,6 +390,14 @@ class LocalEngine(EngineTelemetryBase):
 
     def close(self):
         self.oi.close()
+
+    def set_on_publish(self, cb) -> None:
+        # the OnlineIndex fires it itself at the end of every merge
+        # pipeline run (writer thread or maintenance worker)
+        self.oi.on_publish = cb
+
+    def _maint_degraded(self) -> bool:
+        return self.oi.maint_degraded
 
     # -- introspection ------------------------------------------------------
 
@@ -631,6 +666,7 @@ class PallasEngine(EngineTelemetryBase):
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
         self._publish(merge_s=time.perf_counter() - t0)
+        self._notify_publish()
 
     # -- introspection ------------------------------------------------------
 
@@ -862,8 +898,18 @@ class ShardedEngine(EngineTelemetryBase):
                 merge_s=merge_s, publish_s=time.perf_counter() - t0,
                 incremental=incremental,
                 dirty_frac=self.last_dirty_frac))
+            self._notify_publish()
 
     # -- introspection ------------------------------------------------------
+
+    @property
+    def n_wal_shards(self) -> int:
+        return self.sd.n_shards
+
+    def shard_ids(self, keys: np.ndarray) -> np.ndarray:
+        return np.asarray(
+            shard_of(self.sd, np.atleast_1d(np.asarray(keys, np.float64))),
+            np.int64)
 
     def items(self):
         snap_k = np.concatenate([f.pair_key for f in self.sd.flats])

@@ -20,11 +20,13 @@ benchmarks, examples) composes with it unchanged.
 from __future__ import annotations
 
 import json
+import os
 import time
 from dataclasses import replace
 
 import numpy as np
 
+from ..durability.wal import OP_DELETE, OP_UPSERT
 from .config import IndexConfig
 from .engines import ENGINE_CLASSES, Engine
 
@@ -37,6 +39,7 @@ class LearnedIndex:
     def __init__(self, engine: Engine, config: IndexConfig):
         self._engine = engine
         self.config = config
+        self._dur = None        # DurabilityManager when config.durability
 
     # -- construction --------------------------------------------------------
 
@@ -44,7 +47,12 @@ class LearnedIndex:
     def build(cls, keys, vals=None, config: IndexConfig | None = None,
               **overrides) -> "LearnedIndex":
         """Bulk-load (Alg. 4) through the configured engine.  `overrides`
-        are `IndexConfig` field replacements, e.g. `engine="pallas"`."""
+        are `IndexConfig` field replacements, e.g. `engine="pallas"`.
+
+        With `config.durability` set, a fresh WAL + base checkpoint are
+        armed under `durability.dir` (any previous durability state there
+        is superseded — use `LearnedIndex.recover` to resurrect it
+        instead of rebuilding)."""
         cfg = config or IndexConfig()
         if overrides:
             cfg = replace(cfg, **overrides)
@@ -66,7 +74,29 @@ class LearnedIndex:
         keep = np.ones(len(keys), bool)
         keep[:-1] = keys[:-1] != keys[1:]
         keys, vals = keys[keep], vals[keep]
-        return cls(ENGINE_CLASSES[cfg.engine](keys, vals, cfg), cfg)
+        ix = cls(ENGINE_CLASSES[cfg.engine](keys, vals, cfg), cfg)
+        if cfg.durability is not None:
+            ix._attach_durability(fresh=True)
+        return ix
+
+    def _attach_durability(self, *, fresh: bool,
+                           resume_lsns: dict | None = None,
+                           start_step: int = 0) -> None:
+        """Arm the WAL + checkpoint subsystem for this index (DESIGN.md
+        section 14) and hook merge publishes to checkpointing."""
+        from ..durability.manager import DurabilityManager
+        self._dur = DurabilityManager.attach(
+            self.config.durability, self, fresh=fresh,
+            resume_lsns=resume_lsns, start_step=start_step)
+        self._engine.set_on_publish(self._dur.on_merge_publish)
+
+    @classmethod
+    def recover(cls, dur_dir: str, config: IndexConfig | None = None,
+                engine: str | None = None) -> "LearnedIndex":
+        """Rebuild from the durability directory after a crash: newest
+        valid checkpoint + WAL tail replay (`repro.durability.recover`)."""
+        from ..durability.recovery import recover as _recover
+        return _recover(dur_dir, config=config, engine=engine)
 
     # -- reads ---------------------------------------------------------------
 
@@ -158,10 +188,12 @@ class LearnedIndex:
         tel = self._engine.telemetry
         if tel.enabled:
             t0 = time.perf_counter()
+            self._log_write(OP_UPSERT, keys, vals)
             self._engine.upsert(keys, vals)
             tel.record_op("upsert", time.perf_counter() - t0, len(keys))
         else:
             tel.count_ops(len(keys))
+            self._log_write(OP_UPSERT, keys, vals)
             self._engine.upsert(keys, vals)
 
     def delete(self, keys) -> None:
@@ -172,11 +204,24 @@ class LearnedIndex:
         tel = self._engine.telemetry
         if tel.enabled:
             t0 = time.perf_counter()
+            self._log_write(OP_DELETE, keys, None)
             self._engine.delete(keys)
             tel.record_op("delete", time.perf_counter() - t0, len(keys))
         else:
             tel.count_ops(len(keys))
+            self._log_write(OP_DELETE, keys, None)
             self._engine.delete(keys)
+
+    def _log_write(self, op: int, keys: np.ndarray,
+                   vals: np.ndarray | None) -> None:
+        """WAL-before-apply: persist the batch before the engine (and
+        thus the caller) sees it as accepted.  A crash between the append
+        and the in-memory apply replays a write the engine never served —
+        upsert/delete replay is idempotent, so that is safe; the reverse
+        order would acknowledge writes a crash could lose."""
+        if self._dur is not None:
+            self._dur.log(op, keys, vals, epoch=self._engine.epoch,
+                          shard_ids=self._engine.shard_ids(keys))
 
     def flush(self) -> dict:
         """Fold every pending write through the host tree and republish;
@@ -190,12 +235,28 @@ class LearnedIndex:
         else:
             tel.count_ops(1)
             self._engine.flush()
+        if self._dur is not None:
+            self._dur.sync()    # flush doubles as the durability barrier
         return self.stats()
 
     def close(self) -> None:
         """Release engine resources (stops the background maintenance
         worker when one is running).  Pending writes stay readable but are
-        no longer folded; idempotent."""
+        no longer folded; idempotent.  With durability armed, the WAL gets
+        a final fsync AFTER the engine drains (a draining background merge
+        may still publish a checkpoint through the manager)."""
+        close = getattr(self._engine, "close", None)
+        if close is not None:
+            close()
+        if self._dur is not None:
+            self._dur.close()
+
+    def abandon(self) -> None:
+        """Crash simulation (tests/benchmarks): drop the index WITHOUT the
+        final WAL fsync, as a SIGKILL would.  The engine's background
+        worker is still stopped so the process can exit."""
+        if self._dur is not None:
+            self._dur.abandon()  # first: late publishes must no-op
         close = getattr(self._engine, "close", None)
         if close is not None:
             close()
@@ -274,12 +335,26 @@ class LearnedIndex:
         """Persist the logical content (live keys/vals incl. pending
         writes) + config.  Load rebuilds the tree — snapshots are derived
         state, and a rebuild re-optimizes the layout for the merged
-        distribution.  `config.bulk_kw` must be JSON-serializable."""
+        distribution.  `config.bulk_kw` must be JSON-serializable.
+
+        The write is atomic (tmp file + `os.replace`): a crash mid-save
+        leaves either the previous file or the new one, never a torn
+        npz."""
         keys, vals = self.items()
-        np.savez(self._npz_path(path), keys=keys, vals=vals,
-                 config=np.frombuffer(
-                     json.dumps(self.config.to_json_dict()).encode(),
-                     dtype=np.uint8))
+        dst = self._npz_path(path)
+        tmp = dst + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, keys=keys, vals=vals,
+                         config=np.frombuffer(
+                             json.dumps(self.config.to_json_dict()).encode(),
+                             dtype=np.uint8))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, dst)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     @classmethod
     def load(cls, path: str,

@@ -25,6 +25,73 @@ import zlib
 import jax
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# shared atomic-publish helpers (also used by repro.durability.checkpoint):
+# every checkpoint directory in the repo follows the same protocol —
+# write into `step_X.tmp/`, fsync-free `os.replace` to publish atomically,
+# maintain a best-effort `latest` pointer, walk candidates newest-first on
+# restore and fall back past corrupt ones.
+# ---------------------------------------------------------------------------
+
+
+def step_name(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def make_tmp_dir(ckpt_dir: str, name: str) -> str:
+    """Fresh `<name>.tmp` staging dir under `ckpt_dir` (replacing stale
+    leftovers from a crashed writer)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    return tmp
+
+
+def publish_dir(ckpt_dir: str, name: str) -> str:
+    """Atomically publish `<name>.tmp` -> `<name>` (os.replace), then move
+    the `latest` pointer.  A crash before the replace leaves only a .tmp
+    (ignored by restore); a crash after it leaves a fully valid step that
+    the newest-first walk finds even without the pointer."""
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    write_latest(ckpt_dir, name)
+    return final
+
+
+def write_latest(ckpt_dir: str, name: str) -> None:
+    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+        f.write(name)
+    os.replace(os.path.join(ckpt_dir, "latest.tmp"),
+               os.path.join(ckpt_dir, "latest"))
+
+
+def step_candidates(ckpt_dir: str) -> list[str]:
+    """Published step dir names, newest first, `latest` pointer (when valid)
+    promoted to the front — the restore walk order."""
+    candidates = sorted((d for d in os.listdir(ckpt_dir)
+                         if d.startswith("step_") and not d.endswith(".tmp")),
+                        reverse=True)
+    latest = os.path.join(ckpt_dir, "latest")
+    if os.path.exists(latest):
+        with open(latest) as f:
+            name = f.read().strip()
+        if name in candidates:
+            candidates.remove(name)
+            candidates.insert(0, name)
+    return candidates
+
+
+def gc_steps(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
 
 def _paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -34,13 +101,8 @@ def _paths(tree):
 
 def save(ckpt_dir: str, step: int, state, extra: dict | None = None,
          keep: int = 3) -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    name = f"step_{step:08d}"
-    tmp = os.path.join(ckpt_dir, name + ".tmp")
-    final = os.path.join(ckpt_dir, name)
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    name = step_name(step)
+    tmp = make_tmp_dir(ckpt_dir, name)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
     arrays = {}
@@ -55,22 +117,9 @@ def save(ckpt_dir: str, step: int, state, extra: dict | None = None,
                     extra=extra or {})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
-        f.write(name)
-    os.replace(os.path.join(ckpt_dir, "latest.tmp"),
-               os.path.join(ckpt_dir, "latest"))
-    _gc(ckpt_dir, keep)
+    final = publish_dir(ckpt_dir, name)
+    gc_steps(ckpt_dir, keep)
     return final
-
-
-def _gc(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
-                   and not d.endswith(".tmp"))
-    for d in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def _load_dir(path: str, template, shardings=None, prefix: str = ""):
@@ -112,18 +161,7 @@ def restore(ckpt_dir: str, template, shardings=None, prefix: str = ""):
     Returns (state, manifest) or (None, None) when nothing is restorable."""
     if not os.path.isdir(ckpt_dir):
         return None, None
-    candidates = sorted((d for d in os.listdir(ckpt_dir)
-                         if d.startswith("step_") and not d.endswith(".tmp")),
-                        reverse=True)
-    # prefer the `latest` pointer if it exists and is valid
-    latest = os.path.join(ckpt_dir, "latest")
-    if os.path.exists(latest):
-        with open(latest) as f:
-            name = f.read().strip()
-        if name in candidates:
-            candidates.remove(name)
-            candidates.insert(0, name)
-    for name in candidates:
+    for name in step_candidates(ckpt_dir):
         path = os.path.join(ckpt_dir, name)
         try:
             return _load_dir(path, template, shardings, prefix)

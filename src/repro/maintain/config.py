@@ -39,6 +39,15 @@ class MaintenanceConfig:
                         never blocks on a publish.
     max_queue         : background task-queue bound; triggers that find the
                         queue full coalesce into the next merge.
+    max_merge_retries : background-merge attempts AFTER the first failure
+                        (jittered exponential backoff between attempts;
+                        re-folding a partially-applied overlay is
+                        idempotent).  After exhaustion the index degrades
+                        to synchronous merges and sets the `maint_degraded`
+                        stats()/metrics() flag.  0 = fail on first error
+                        (the pre-durability behavior).
+    retry_backoff_s   : base backoff before retry k is
+                        `retry_backoff_s * 2**k`, jittered to 50-150%.
     """
 
     incremental: bool = True
@@ -49,6 +58,8 @@ class MaintenanceConfig:
     arrival_window: int = 128
     background: bool = False
     max_queue: int = 4
+    max_merge_retries: int = 2
+    retry_backoff_s: float = 0.05
 
     # -- (de)serialization for api.IndexConfig round-trips -------------------
 
@@ -58,7 +69,9 @@ class MaintenanceConfig:
                     retrain_min_writes=self.retrain_min_writes,
                     tombstone_trigger=self.tombstone_trigger,
                     arrival_window=self.arrival_window,
-                    background=self.background, max_queue=self.max_queue)
+                    background=self.background, max_queue=self.max_queue,
+                    max_merge_retries=self.max_merge_retries,
+                    retry_backoff_s=self.retry_backoff_s)
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "MaintenanceConfig":

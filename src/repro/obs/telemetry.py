@@ -23,7 +23,7 @@ import time
 
 from . import watchdog
 from .metrics import MetricsRegistry
-from .tracing import MERGE_SPANS, SpanRecorder
+from .tracing import MERGE_SPANS, RECOVERY_SPANS, SpanRecorder
 
 # the facade op set: every engine serves exactly these through
 # `repro.api.LearnedIndex`, so per-op histograms share one name space
@@ -50,8 +50,10 @@ class Telemetry:
         self.enabled = bool(enabled)
         self.metrics = MetricsRegistry()
         self.metrics.declare_histogram(*(f"op.{op}" for op in OPS))
-        self.metrics.declare_counter("publish.retraced")
-        self.spans = SpanRecorder(declare=MERGE_SPANS)
+        self.metrics.declare_counter("publish.retraced", "maint.errors",
+                                     "recovery.count",
+                                     "recovery.replayed_records")
+        self.spans = SpanRecorder(declare=MERGE_SPANS + RECOVERY_SPANS)
         self.ops_total = 0
         # watchdog window: the build mark anchors "traces since build";
         # mark_warm() anchors the post-warmup (regression) window

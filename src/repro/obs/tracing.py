@@ -17,9 +17,18 @@ the same span names:
   merge.publish      — device upload + epoch flip
   merge.frozen_dwell — overlay freeze -> frozen drop (reads resolve the
                        frozen overlay for this long; background only)
+  merge.failed       — one failed merge attempt (duration = time spent in
+                       the pipeline before it died; see the bounded-retry
+                       loop in `online.merge`)
 
 Engines that run a stage synchronously inside another (e.g. the sharded
 engine's per-shard fold) record one span per shard with a `shard` attr.
+
+`RECOVERY_SPANS` is the crash-recovery taxonomy (DESIGN.md section 14):
+load (checkpoint walk + npz read), replay (WAL tail through the fold
+path), publish (fresh base checkpoint + WAL re-arm).  Recovery spans are
+recorded unconditionally — bypassing the telemetry `enabled` gate —
+because recovery is rare and always worth seeing.
 """
 
 from __future__ import annotations
@@ -32,7 +41,10 @@ from dataclasses import dataclass, field
 from .metrics import latency_summary
 
 MERGE_SPANS = ("merge.queue_wait", "merge.fold", "merge.retrain",
-               "merge.flatten", "merge.publish", "merge.frozen_dwell")
+               "merge.flatten", "merge.publish", "merge.frozen_dwell",
+               "merge.failed")
+
+RECOVERY_SPANS = ("recovery.load", "recovery.replay", "recovery.publish")
 
 
 @dataclass(frozen=True)
@@ -47,7 +59,7 @@ class SpanRecorder:
     """Bounded span ring + per-name duration accumulators."""
 
     def __init__(self, maxlen: int = 2048,
-                 declare: tuple[str, ...] = MERGE_SPANS):
+                 declare: tuple[str, ...] = MERGE_SPANS + RECOVERY_SPANS):
         self.ring: deque[Span] = deque(maxlen=maxlen)
         self._durations: dict[str, list[float]] = {n: [] for n in declare}
 

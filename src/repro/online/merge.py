@@ -21,6 +21,7 @@ Merge triggers (`MergePolicy.should_merge`):
 
 from __future__ import annotations
 
+import random
 import time
 from collections import Counter
 from dataclasses import dataclass
@@ -121,6 +122,11 @@ class OnlineIndex:
                            if m is not None and m.retrain else None)
         self.scheduler = (MaintenanceScheduler(m.max_queue)
                           if m is not None and m.background else None)
+        self.on_publish = None         # post-publish hook (durability
+        #                                checkpoints ride it; runs on
+        #                                whichever thread published)
+        self.maint_degraded = False    # background retries exhausted ->
+        #                                merges run synchronously now
         self._merging: TombstoneOverlay | None = None   # frozen, folding
         self._merge_failed = False           # frozen needs writer reclaim
         self._ov_cache: tuple | None = None  # (overlay, merging, arrays)
@@ -256,26 +262,60 @@ class OnlineIndex:
         self._leaf_omega = {}
         self._unlocated_keys = []
         t_sub = time.perf_counter()    # -> merge.queue_wait (submit -> start)
-        if self.scheduler is not None and self.scheduler.submit(
-                lambda: self._merge_impl(frozen, reason, lag, t_sub)):
+        if (self.scheduler is not None and not self.maint_degraded
+                and self.scheduler.submit(
+                    lambda: self._merge_impl(frozen, reason, lag, t_sub,
+                                             retry=True))):
             return self.store.stats
         return self._merge_impl(frozen, reason, lag, t_sub)  # sync/closed
 
     def _merge_impl(self, frozen: TombstoneOverlay, reason: str,
-                    lag: int, t_sub: float) -> EpochStats:
+                    lag: int, t_sub: float,
+                    retry: bool = False) -> EpochStats:
         """The merge pipeline: fold (+accounting) -> retrain -> flatten ->
         publish.  Runs on the caller's thread or the maintenance worker.
-        On failure the frozen overlay STAYS installed (reads keep
-        resolving it — exactness holds) and is flagged; the next merge on
-        the writer thread reclaims it into the live overlay (newer wins;
-        re-folding partially-applied entries is idempotent) and retries.
-        The worker never assigns self.overlay or the trigger counters —
-        that would race the writer's own updates."""
-        try:
-            return self._merge_steps(frozen, reason, lag, t_sub)
-        except BaseException:
-            self._merge_failed = True
-            raise
+
+        On the worker path (`retry=True`) a failed attempt is retried up
+        to `MaintenanceConfig.max_merge_retries` times with jittered
+        exponential backoff — re-running the pipeline over the same frozen
+        overlay is idempotent (a partially-applied fold re-applies
+        last-write-wins), though pipeline counters/spans from the dead
+        attempt do double-count.  Each failed attempt bumps the
+        `maint.errors` counter and records a `merge.failed` span on the
+        index's own registry.
+
+        After exhaustion (or a sync-path failure) the frozen overlay STAYS
+        installed (reads keep resolving it — exactness holds) and is
+        flagged; the next merge on the writer thread reclaims it into the
+        live overlay (newer wins) and retries.  Exhaustion also degrades
+        the index to synchronous merges (`maint_degraded`) so a persistent
+        worker-side fault stops burning the scheduler.  The worker never
+        assigns self.overlay or the trigger counters — that would race
+        the writer's own updates."""
+        m = self.maint
+        attempts = 1 + (m.max_merge_retries if retry and m is not None
+                        else 0)
+        for attempt in range(attempts):
+            t0 = time.perf_counter()
+            try:
+                return self._merge_steps(frozen, reason, lag, t_sub)
+            except BaseException:
+                # failure visibility is unconditional (not gated on
+                # `enabled`) but only on the index's OWN registry —
+                # NULL_TELEMETRY is a shared module global
+                if self.tel is not NULL_TELEMETRY:
+                    self.tel.metrics.count("maint.errors")
+                    self.tel.spans.record("merge.failed",
+                                          time.perf_counter() - t0,
+                                          reason=reason, attempt=attempt)
+                if attempt == attempts - 1:
+                    self._merge_failed = True
+                    if retry:
+                        self.maint_degraded = True
+                    raise
+                backoff = m.retry_backoff_s * (2 ** attempt)
+                time.sleep(backoff * (0.5 + random.random()))
+        raise AssertionError("unreachable")
 
     def _merge_steps(self, frozen: TombstoneOverlay, reason: str,
                      lag: int, t_sub: float) -> EpochStats:
@@ -305,6 +345,8 @@ class OnlineIndex:
         self.tel.record_span("merge.frozen_dwell",
                              time.perf_counter() - self._frozen_t0,
                              reason=reason)
+        if self.on_publish is not None:   # durability checkpoints ride here
+            self.on_publish()
         return st
 
     def _publish(self, overlay_fill: float = 0.0, merge_s: float = 0.0,

@@ -248,6 +248,53 @@ class WorkloadRunner:
         return report
 
 
+    # -- kill-and-recover replay (DESIGN.md section 14) ----------------------
+
+    def run_kill_recover(self, batches: list[OpBatch], kill_at: int,
+                         spec: WorkloadSpec | None = None,
+                         name: str = "") -> dict:
+        """Replay `batches[:kill_at]` oracle-checked, crash the index
+        (`abandon()`: no final fsync — exactly a SIGKILL's disk state),
+        `LearnedIndex.recover` it from its durability directory, diff the
+        recovered content bit-exactly against the oracle at the kill
+        point, then continue the remaining stream on the RECOVERED index
+        (self.index is replaced; the caller closes it via the runner).
+
+        Requires `config.durability`.  Returns a JSON-able dict with both
+        leg reports, the recovery wall time, and the replayed-record
+        count; strict mode raises `WorkloadDivergence` on any diff."""
+        from ..api.index import LearnedIndex
+        if not self.check:
+            raise ValueError("kill-and-recover is a differential mode; "
+                             "construct the runner with check=True")
+        dur = self.index.config.durability
+        if dur is None:
+            raise ValueError("kill-and-recover requires config.durability "
+                             "(there is no WAL to recover from)")
+        name = name or (spec.name if spec is not None else "stream")
+        pre = self.run(batches[:kill_at], spec=spec,
+                       name=f"{name}[pre-kill]")
+        self.index.abandon()
+        t0 = time.perf_counter()
+        self.index = LearnedIndex.recover(dur.dir)
+        recovery_s = time.perf_counter() - t0
+        k, v = self.index.items()
+        wk, wv = self.oracle.items()
+        msgs = _diff(f"{name} post-recovery items()", (k, v), (wk, wv))
+        if self.strict and msgs:
+            raise WorkloadDivergence("; ".join(msgs))
+        counters = self.index.metrics()["counters"]
+        post = self.run(batches[kill_at:], spec=spec,
+                        name=f"{name}[post-recovery]")
+        return dict(
+            name=name, kill_at_batch=kill_at, recovery_s=recovery_s,
+            replayed_records=int(counters["recovery.replayed_records"]),
+            post_recovery_divergences=msgs,
+            n_divergences=(len(pre.divergences) + len(msgs)
+                           + len(post.divergences)),
+            pre=pre.to_json_dict(), post=post.to_json_dict())
+
+
 def run_preset(index, preset_or_spec, loaded_keys=None, **scale
                ) -> WorkloadReport:
     """One-call convenience: resolve a preset name (or take a spec),

@@ -1,0 +1,300 @@
+"""Crash-injection kit for the durability subsystem (DESIGN.md section 14).
+
+A CHILD process builds a durable index and replays a fixed, deterministic
+op stream; `DILI_CRASH_POINT="<point>:<n>"` (see `repro.durability.hooks`)
+makes it SIGKILL itself at the n-th crossing of an injection point:
+
+    wal.append        after the n-th facade write's WAL append (the record
+                      is durable, the engine may never have applied it)
+    wal.mid_record    halfway through writing the n-th WAL record (torn
+                      record on disk)
+    ckpt.pre_publish  checkpoint staged but not yet published (tmp dir)
+    ckpt.mid_publish  checkpoint published, `latest`/rotation/GC not done
+
+The PARENT (`run_point`) reaps the SIGKILL, runs `LearnedIndex.recover`,
+and diffs the recovered content bit-exactly against a `SortedOracle` fed
+exactly the acknowledged-durable prefix of the op stream — computed from
+the kill point alone, using the same per-shard append schedule the
+durability manager uses.
+
+Both a pytest suite (tests/test_durability.py) and CI drive this via
+`run_matrix`; `python tests/crashkit.py matrix --engine local` runs it
+standalone (exit 0 = every point recovered exactly).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")    # before any jax import
+
+import numpy as np
+
+SELF = os.path.abspath(__file__)
+SRC = os.path.join(os.path.dirname(os.path.dirname(SELF)), "src")
+if SRC not in sys.path:                      # standalone invocation
+    sys.path.insert(0, SRC)
+
+# -- the deterministic workload ----------------------------------------------
+
+BASE_SEED, OPS_SEED = 77, 123
+N_BASE = 1200
+N_BATCHES = 6          # batch = one upsert op + one delete op
+FLUSH_AFTER_OPS = 6    # ops before the explicit flush (=> checkpoint hit 2)
+
+
+def base_data() -> tuple[np.ndarray, np.ndarray]:
+    """Integer-valued keys < 2^21 (f32-exact for the pallas engine) and
+    int32-range vals (the pallas payload width)."""
+    rng = np.random.default_rng(BASE_SEED)
+    keys = np.unique(rng.integers(0, 1 << 21, N_BASE)).astype(np.float64)
+    vals = rng.integers(0, 1 << 30, len(keys)).astype(np.int64)
+    return keys, vals
+
+
+def gen_ops() -> list[tuple[str, np.ndarray, np.ndarray | None]]:
+    """The fixed op stream: [("upsert", keys, vals) | ("delete", keys,
+    None), ...].  One op = one facade call = one WAL group commit."""
+    base, _ = base_data()
+    rng = np.random.default_rng(OPS_SEED)
+    ops = []
+    for _ in range(N_BATCHES):
+        pick = rng.choice(len(base), 40, replace=False)
+        up_k = np.unique(np.concatenate([
+            base[pick[:20]],                 # updates of existing keys
+            base[pick[20:]] + 0.5]))         # fresh keys (0.5: f32-exact)
+        up_v = rng.integers(0, 1 << 30, len(up_k)).astype(np.int64)
+        ops.append(("upsert", up_k, up_v))
+        ops.append(("delete", base[rng.choice(len(base), 8, replace=False)],
+                    None))
+    return ops
+
+
+def make_config(engine: str, dur_dir: str):
+    from repro.api import IndexConfig, manual_merge_policy
+    from repro.durability import DurabilityConfig
+    # manual merges + explicit flush: the checkpoint-hit schedule is then
+    # deterministic (hit 1 = build base, hit 2 = first flush's publish)
+    return IndexConfig(engine=engine, merge=manual_merge_policy(),
+                       overlay_cap=256,
+                       durability=DurabilityConfig(dir=dur_dir,
+                                                   fsync="always"))
+
+
+def _schedule_indices(engine: str) -> list[tuple[int, list[int]]]:
+    """[(op_idx, key indices within that op)] in WAL-append order —
+    mirrors `DurabilityManager.log`'s per-shard routing (ascending shard
+    id within an op) against a throwaway build of the same base data.
+    Must run under the SAME device topology as the child (shard
+    boundaries depend on the device count)."""
+    from repro.api import IndexConfig, LearnedIndex, manual_merge_policy
+    keys, vals = base_data()
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine=engine, merge=manual_merge_policy(), overlay_cap=256))
+    try:
+        eng = ix._engine
+        sched = []
+        for i, (op, k, _) in enumerate(gen_ops()):
+            sids = eng.shard_ids(k)
+            for s in np.unique(sids):
+                sched.append((i, np.flatnonzero(sids == s).tolist()))
+        return sched
+    finally:
+        ix.close()
+
+
+def append_schedule(engine: str, n_devices: int = 1):
+    """[(op_idx, op, keys_subset, vals_subset)] in WAL-append order, so
+    the parent can predict exactly which record the n-th append wrote.
+    With n_devices > 1 the routing is computed in a subprocess under the
+    forced device topology (the parent must keep seeing 1 device)."""
+    if n_devices == 1:
+        entries = _schedule_indices(engine)
+    else:
+        import json
+        proc = subprocess.run(
+            [sys.executable, SELF, "schedule", "--engine", engine],
+            env=_child_env(n_devices), capture_output=True, text=True,
+            timeout=600)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        entries = json.loads(proc.stdout.splitlines()[-1])
+    ops = gen_ops()
+    sched = []
+    for i, idx in entries:
+        op, k, v = ops[i]
+        idx = np.asarray(idx, int)
+        sched.append((i, op, k[idx], None if v is None else v[idx]))
+    return sched
+
+
+# -- expected recovered state -------------------------------------------------
+
+
+def oracle_after_ops(ops_prefix):
+    """SortedOracle fed the base data + a prefix of the op stream."""
+    from repro.workloads.oracle import SortedOracle
+    keys, vals = base_data()
+    oracle = SortedOracle(keys, vals)
+    for op, k, v in ops_prefix:
+        if op == "upsert":
+            oracle.upsert(k, v)
+        else:
+            oracle.delete(k)
+    return oracle
+
+
+def expected_oracle(engine: str, point: str, hits: int,
+                    n_devices: int = 1):
+    """The acknowledged-durable prefix for a kill at `point:hits`."""
+    from repro.workloads.oracle import SortedOracle
+    ops = gen_ops()
+    if point == "wal.append":
+        # the n-th facade write's append completed (the hook fires after
+        # the manager releases its lock), nothing after it ran
+        return oracle_after_ops(ops[:hits])
+    if point == "wal.mid_record":
+        # appends 1..n-1 are durable; the n-th record is torn (its first
+        # half is on disk — recovery must truncate it away)
+        keys, vals = base_data()
+        oracle = SortedOracle(keys, vals)
+        for _, op, k, v in append_schedule(engine, n_devices)[: hits - 1]:
+            if op == "upsert":
+                oracle.upsert(k, v)
+            else:
+                oracle.delete(k)
+        return oracle
+    if point in ("ckpt.pre_publish", "ckpt.mid_publish"):
+        # hit 2 = the post-first-flush checkpoint: every op before the
+        # flush was WAL-appended; the checkpoint itself must not matter
+        assert hits == 2, "checkpoint points target the first flush"
+        return oracle_after_ops(ops[:FLUSH_AFTER_OPS])
+    raise ValueError(f"unknown crash point {point!r}")
+
+
+# -- child --------------------------------------------------------------------
+
+
+def child_main(engine: str, dur_dir: str) -> int:
+    from repro.api import LearnedIndex
+    keys, vals = base_data()
+    ix = LearnedIndex.build(keys, vals, config=make_config(engine, dur_dir))
+    for i, (op, k, v) in enumerate(gen_ops()):
+        if op == "upsert":
+            ix.upsert(k, v)
+        else:
+            ix.delete(k)
+        if i + 1 == FLUSH_AFTER_OPS:
+            ix.flush()                       # merge publish -> checkpoint
+    ix.flush()
+    ix.close()
+    return 3          # reachable only if the armed crash point never fired
+
+
+def _child_env(n_devices: int) -> dict:
+    env = dict(os.environ,
+               JAX_ENABLE_X64="1",
+               PYTHONPATH=os.pathsep.join(
+                   [SRC] + [p for p in (os.environ.get("PYTHONPATH"),)
+                            if p]))
+    if n_devices > 1:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_devices} "
+            + env.get("XLA_FLAGS", ""))
+    return env
+
+
+def spawn_child(engine: str, dur_dir: str, point: str, hits: int,
+                n_devices: int = 1) -> subprocess.CompletedProcess:
+    env = dict(_child_env(n_devices),
+               DILI_CRASH_POINT=f"{point}:{hits}")
+    return subprocess.run(
+        [sys.executable, SELF, "child", "--engine", engine,
+         "--dir", dur_dir],
+        env=env, capture_output=True, text=True, timeout=600)
+
+
+# -- parent: run one point / the whole matrix ---------------------------------
+
+
+def run_point(engine: str, dur_dir: str, point: str, hits: int,
+              n_devices: int = 1) -> dict:
+    """Spawn, kill, recover, diff.  Returns a result dict; raises
+    AssertionError on any divergence from the oracle.  The recovery runs
+    in THIS process (1 device): a multi-device child's per-shard WALs are
+    re-sharded elastically onto the parent's topology."""
+    from repro.api import LearnedIndex
+    proc = spawn_child(engine, dur_dir, point, hits, n_devices)
+    assert proc.returncode == -9, (
+        f"{engine}/{point}:{hits}: child exited {proc.returncode} instead "
+        f"of dying at the crash point\n{proc.stdout}\n{proc.stderr}")
+    oracle = expected_oracle(engine, point, hits, n_devices)
+    ix = LearnedIndex.recover(dur_dir)
+    try:
+        k, v = ix.items()
+        ok, ov = oracle.items()
+        np.testing.assert_array_equal(
+            k, ok, err_msg=f"{engine}/{point}:{hits} recovered keys")
+        np.testing.assert_array_equal(
+            v, ov, err_msg=f"{engine}/{point}:{hits} recovered vals")
+        replayed = int(ix.metrics()["counters"]
+                       ["recovery.replayed_records"])
+    finally:
+        ix.close()
+    return dict(engine=engine, point=point, hits=hits,
+                n_items=len(k), replayed_records=replayed)
+
+
+def matrix_points(engine: str, n_devices: int = 1) -> list[tuple[str, int]]:
+    """The kill-point matrix: every injection point, both before and
+    after the first checkpoint where the point allows it."""
+    n_before = len([e for e in append_schedule(engine, n_devices)
+                    if e[0] < FLUSH_AFTER_OPS])
+    return [
+        ("wal.append", 2),                   # pre-checkpoint tail
+        ("wal.append", FLUSH_AFTER_OPS + 3),  # post-checkpoint tail
+        ("wal.mid_record", 3),               # torn record, pre-checkpoint
+        ("wal.mid_record", n_before + 1),    # torn first record post-ckpt
+        ("ckpt.pre_publish", 2),
+        ("ckpt.mid_publish", 2),
+    ]
+
+
+def run_matrix(engine: str, tmp_root: str, n_devices: int = 1
+               ) -> list[dict]:
+    results = []
+    for point, hits in matrix_points(engine, n_devices):
+        d = os.path.join(tmp_root,
+                         f"{engine}_{point.replace('.', '_')}_{hits}")
+        results.append(run_point(engine, d, point, hits, n_devices))
+        print(f"[crashkit] ok {results[-1]}", flush=True)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+    for mode in ("child", "schedule", "matrix"):
+        p = sub.add_parser(mode)
+        p.add_argument("--engine", default="local")
+        p.add_argument("--dir", default=None)
+        p.add_argument("--devices", type=int, default=1)
+    args = ap.parse_args(argv)
+    if args.mode == "child":
+        return child_main(args.engine, args.dir)
+    if args.mode == "schedule":
+        import json
+        print(json.dumps(_schedule_indices(args.engine)))
+        return 0
+    import tempfile
+    root = args.dir or tempfile.mkdtemp(prefix="crashkit_")
+    run_matrix(args.engine, root, args.devices)
+    print(f"[crashkit] matrix passed for engine={args.engine} "
+          f"(devices={args.devices})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -122,7 +122,9 @@ STATS_CONTRACT = frozenset((
     # maintenance counters (PR 5): every engine reports them, with or
     # without a MaintenanceConfig
     "n_full_flattens", "n_incremental_flattens", "n_retrains",
-    "dirty_row_fraction", "maint_queue_depth", "maint_errors"))
+    "dirty_row_fraction", "maint_queue_depth", "maint_errors",
+    # retry exhaustion flag (PR 7): background merges degraded to sync
+    "maint_degraded"))
 
 
 def test_stats_contract_equivalence():

@@ -1,0 +1,97 @@
+"""`repro.ft.checkpoint` corruption fallback: restore must walk past
+flipped-byte shard payloads, mangled manifests, and stale `latest`
+pointers to the newest checkpoint that still validates — and report
+(None, None) only when nothing does.  (The atomic-publish helpers under
+test here are shared with `repro.durability.checkpoint`.)"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ft import checkpoint as ftck
+
+
+def _state(step: int) -> dict:
+    return dict(w=np.full((4, 3), float(step)),
+                b=np.arange(3, dtype=np.float64) + step)
+
+
+def _template() -> dict:
+    return dict(w=np.zeros((4, 3)), b=np.zeros(3))
+
+
+def _flip_byte(path: str, frac: float = 0.5) -> None:
+    blob = bytearray(open(path, "rb").read())
+    blob[int(len(blob) * frac)] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+
+
+def test_restore_skips_corrupt_shard_npz(tmp_path):
+    d = str(tmp_path)
+    ftck.save(d, 1, _state(1))
+    ftck.save(d, 2, _state(2))
+    _flip_byte(os.path.join(d, ftck.step_name(2), "shard_00000.npz"))
+    state, manifest = ftck.restore(d, _template())
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  _state(1)["w"])
+
+
+def test_restore_skips_mangled_manifest(tmp_path):
+    d = str(tmp_path)
+    ftck.save(d, 1, _state(1))
+    ftck.save(d, 2, _state(2))
+    with open(os.path.join(d, ftck.step_name(2), "manifest.json"), "w") as f:
+        f.write("{not json")
+    state, manifest = ftck.restore(d, _template())
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(state["b"]),
+                                  _state(1)["b"])
+
+
+def test_restore_checksum_catches_inplace_bitflip(tmp_path):
+    """A flip INSIDE an array payload that still unzips must fail the
+    per-leaf CRC, not silently restore wrong weights."""
+    d = str(tmp_path)
+    ftck.save(d, 1, _state(1))
+    ftck.save(d, 2, _state(2))
+    npz = os.path.join(d, ftck.step_name(2), "shard_00000.npz")
+    # rewrite the npz uncompressed with one poisoned leaf: valid zip,
+    # wrong bytes — only the manifest checksum can catch it
+    data = dict(np.load(npz))
+    data["leaf_00000"] = data["leaf_00000"].copy()
+    data["leaf_00000"].flat[0] += 1.0
+    np.savez(npz, **data)
+    state, manifest = ftck.restore(d, _template())
+    assert manifest["step"] == 1
+
+
+def test_restore_ignores_stale_latest_pointer(tmp_path):
+    d = str(tmp_path)
+    ftck.save(d, 1, _state(1))
+    ftck.save(d, 2, _state(2))
+    ftck.write_latest(d, ftck.step_name(7))       # names a missing step
+    state, manifest = ftck.restore(d, _template())
+    assert manifest["step"] == 2
+
+
+def test_restore_nothing_valid_returns_none(tmp_path):
+    d = str(tmp_path)
+    assert ftck.restore(d, _template()) == (None, None)   # no dir at all
+    ftck.save(d, 1, _state(1))
+    _flip_byte(os.path.join(d, ftck.step_name(1), "shard_00000.npz"))
+    assert ftck.restore(d, _template()) == (None, None)
+
+
+def test_tmp_dirs_are_never_candidates(tmp_path):
+    """A crashed writer's `.tmp` staging dir must not shadow the newest
+    published step (the pre-publish crash state)."""
+    d = str(tmp_path)
+    ftck.save(d, 1, _state(1))
+    tmp = ftck.make_tmp_dir(d, ftck.step_name(2))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(dict(step=2), f)
+    assert ftck.step_candidates(d) == [ftck.step_name(1)]
+    _, manifest = ftck.restore(d, _template())
+    assert manifest["step"] == 1

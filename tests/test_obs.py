@@ -11,8 +11,9 @@ import numpy as np
 import pytest
 
 from repro.api import IndexConfig, LearnedIndex, MaintenanceConfig
-from repro.obs import (MERGE_SPANS, NULL_TELEMETRY, OPS, LatencyHistogram,
-                       MetricsRegistry, Telemetry, latency_summary, watchdog)
+from repro.obs import (MERGE_SPANS, NULL_TELEMETRY, OPS, RECOVERY_SPANS,
+                       LatencyHistogram, MetricsRegistry, Telemetry,
+                       latency_summary, watchdog)
 
 ENGINES = ("local", "pallas", "sharded")
 
@@ -95,7 +96,7 @@ def test_telemetry_snapshot_fixed_taxonomy():
     snap = t.snapshot()
     assert snap["schema"] == "dili.metrics/1"
     assert set(snap["ops"]) == set(OPS)
-    assert set(snap["spans"]) == set(MERGE_SPANS)
+    assert set(snap["spans"]) == set(MERGE_SPANS + RECOVERY_SPANS)
     assert snap["retrace"]["post_warmup_traces"] == 0
     json.dumps(snap)
 
