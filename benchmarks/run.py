@@ -678,6 +678,229 @@ def durability_bench() -> dict:
     return sections
 
 
+# --serve sizing knobs: ops per load leg (capped), concurrent client
+# streams, ops per client request (small on purpose — coalescing many
+# small requests into pow2 facade batches is the thing under test),
+# initial offered rate for the saturation ramp, and target leg seconds
+N_SERVE_OPS = int(os.environ.get("BENCH_SERVE_OPS",
+                                 str(min(N_WORKLOAD_OPS, 20000))))
+N_SERVE_CLIENTS = int(os.environ.get("BENCH_SERVE_CLIENTS", "4"))
+N_SERVE_REQ_OPS = int(os.environ.get("BENCH_SERVE_REQ_OPS", "16"))
+SERVE_START_RATE = float(os.environ.get("BENCH_SERVE_START_RATE", "4000"))
+SERVE_LEG_S = float(os.environ.get("BENCH_SERVE_LEG_S", "2.0"))
+
+
+class _StreamTap:
+    """Sequential request supply for the serving legs: one generator
+    stream consumed front to back (slices must stay in order — later
+    deletes name keys earlier slices inserted), regenerated with a fresh
+    seed when it runs dry.  Perf legs only; the oracle leg uses its own
+    single dedicated stream."""
+
+    def __init__(self, spec, keys):
+        self.spec, self.keys = spec, keys
+        self.seed = spec.seed
+        self._refill()
+
+    def _refill(self):
+        from repro.workloads import generate_stream
+        self.batches = generate_stream(
+            self.spec.scaled(seed=self.seed), self.keys)
+        self.seed += 1
+        self.i = 0
+
+    def take(self, n_ops: int) -> list:
+        out, got = [], 0
+        while got < n_ops:
+            if self.i >= len(self.batches):
+                self._refill()
+            b = self.batches[self.i]
+            self.i += 1
+            out.append(b)
+            got += b.n_ops
+        return out
+
+
+def _serve_leg_ops(rate: float) -> int:
+    return int(np.clip(rate * SERVE_LEG_S, 1000, N_SERVE_OPS))
+
+
+def _serve_index(keys, *, background: bool, telemetry: bool):
+    from repro.api import IndexConfig, LearnedIndex, MaintenanceConfig
+    return LearnedIndex.build(keys, config=IndexConfig(
+        engine=ENGINE, sample_stride=4, overlay_cap=8192,
+        maintenance=MaintenanceConfig(background=background),
+        telemetry=telemetry))
+
+
+def _warm_serve_buckets(ix, keys, cfg) -> None:
+    """Mint every read-path executable the coalescer can reach (pow2
+    lane buckets from one request up to the batch cap) before the timed
+    legs, then anchor the retrace watchdog."""
+    k0 = float(keys[0])
+    b = 64
+    while b <= cfg.max_batch_ops:
+        ix.lookup(np.full(b, k0))
+        ix.range(np.full(b, k0), np.full(b, k0 + 4.0),
+                 max_hits=cfg.max_hits)
+        b *= 2
+    ix.telemetry.mark_warm()
+
+
+def _leg_brief(rep) -> dict:
+    lat = rep.latency_ms()
+    return dict(offered_ops_per_s=rep.offered_ops_per_s,
+                achieved_ops_per_s=rep.achieved_ops_per_s,
+                n_ops=rep.n_ops, shed_frac=rep.shed_frac,
+                late_submits=rep.late_submits,
+                lookup_ms_p99=lat.get("lookup", {}).get("ms_p99"))
+
+
+def serve_bench(preset: str) -> dict:
+    """Concurrent serving sections for BENCH_PR2.json (``--serve``): the
+    open-loop throughput-latency curve of the `repro.serve` front-end on
+    ENGINE (DESIGN.md section 15).
+
+    Per preset, one `serve,<preset>` section recording
+
+      * saturation_ops_per_s — geometric offered-rate ramp until the
+        batcher stops keeping up; best achieved rate across legs;
+      * latency_at — full p50/p95/p99/p999 end-to-end (scheduled arrival
+        -> completion) per op at 50%/80%/95% of saturation;
+      * oracle — a journaled run at 50% saturation replayed through
+        `WorkloadRunner` on a fresh index: any batch-level divergence
+        raises, and the fresh index's final items() must equal the
+        served index's bit-exactly (n_divergences is asserted 0 here,
+        not just reported);
+      * maintenance_compare — the SAME offered load against background
+        vs synchronous maintenance (local engine; the ROADMAP's "prove
+        background merges pay off under traffic" number).
+
+    Request granularity is N_SERVE_REQ_OPS ops (default 16): small
+    requests from N_SERVE_CLIENTS concurrent client threads, coalesced
+    by the batcher into pow2 facade batches."""
+    from repro.serve import ServeConfig, ServeFrontend, open_loop, \
+        saturation_search
+    from repro.workloads import PRESETS, WorkloadRunner, generate_stream
+    keys = workload_universe()
+    spec = PRESETS[preset].scaled(n_ops=N_SERVE_OPS,
+                                  batch_size=N_SERVE_REQ_OPS)
+    scfg = ServeConfig()
+    bg_main = ENGINE == "local"     # background maintenance is local-only
+    tag = f"serve,{preset}"
+    sec: dict = dict(engine=ENGINE, preset=preset,
+                     n_clients=N_SERVE_CLIENTS, req_ops=N_SERVE_REQ_OPS,
+                     background_maintenance=bg_main)
+
+    # -- saturation ramp + latency legs on one served index ------------------
+    print(f"# serve: {preset} on the '{ENGINE}' engine "
+          f"({N_SERVE_CLIENTS} open-loop client streams, "
+          f"{N_SERVE_REQ_OPS}-op requests)")
+    ix = _serve_index(keys, background=bg_main,
+                      telemetry=bool(METRICS_JSON))
+    _warm_serve_buckets(ix, keys, scfg)
+    tap = _StreamTap(spec, keys)
+    fe = ServeFrontend(ix, scfg, journal=False)
+
+    def mk(_leg):
+        # mirrors saturation_search's geometric ramp (factor=2.0 below)
+        return tap.take(_serve_leg_ops(SERVE_START_RATE * (2.0 ** _leg)))
+
+    sat, ramp = saturation_search(fe, mk, SERVE_START_RATE, factor=2.0,
+                                  max_legs=7, n_clients=N_SERVE_CLIENTS)
+    sec["saturation_ops_per_s"] = sat
+    sec["ramp"] = [_leg_brief(l) for l in ramp]
+    csv_row(f"{tag},{ENGINE},saturation_ops_per_s", sat,
+            f"ramp_legs={len(ramp)};clients={N_SERVE_CLIENTS}")
+    sec["latency_at"] = {}
+    for frac in (0.5, 0.8, 0.95):
+        rate = frac * sat
+        rep = open_loop(fe, tap.take(_serve_leg_ops(rate)), rate,
+                        n_clients=N_SERVE_CLIENTS)
+        d = rep.to_json_dict()
+        sec["latency_at"][f"{int(frac * 100)}%"] = d
+        lk = d["latency_ms"].get("lookup", {})
+        csv_row(f"{tag},{ENGINE},p99_at_{int(frac * 100)}pct",
+                lk.get("ms_p99", 0.0),
+                f"rate={rate:.0f};achieved={rep.achieved_ops_per_s:.0f};"
+                f"p50={lk.get('ms_p50', 0.0):.2f};"
+                f"p999={lk.get('ms_p999', 0.0):.2f};"
+                f"shed={rep.shed_frac:.3f}")
+    sec["batcher"] = fe.stats()
+    fe.close()
+    if METRICS_JSON:
+        METRICS_SECTIONS[tag] = ix.metrics()
+    ix.close()
+
+    # -- oracle equivalence: journaled 50%-rate run, replayed ----------------
+    print(f"# serve: {preset} oracle equivalence "
+          f"(journal replay on a fresh index)")
+    served = _serve_index(keys, background=bg_main, telemetry=False)
+    _warm_serve_buckets(served, keys, scfg)
+    fe = ServeFrontend(served, scfg, journal=True)
+    ostream = generate_stream(spec.scaled(seed=spec.seed + 977), keys)
+    orep = open_loop(fe, ostream, max(0.5 * sat, SERVE_START_RATE),
+                     n_clients=N_SERVE_CLIENTS)
+    journal = fe.journal_batches()
+    fe.close()
+    fresh = _serve_index(keys, background=False, telemetry=False)
+    # strict replay: any batch-level oracle divergence raises out of the
+    # bench run (CI-visible), same policy as workload_bench
+    wrep = WorkloadRunner(fresh).run(journal, name=f"{tag},replay")
+    k1, v1 = served.items()
+    k2, v2 = fresh.items()
+    bit_exact = bool(np.array_equal(k1, k2) and np.array_equal(v1, v2))
+    served.close()
+    fresh.close()
+    if not bit_exact:
+        raise AssertionError(
+            f"{tag}: concurrent run's final items() diverged from its "
+            f"own journal's deterministic replay")
+    sec["oracle"] = dict(n_divergences=len(wrep.divergences),
+                         journal_batches=len(journal),
+                         checked_ops=wrep.n_ops, bit_exact=bit_exact,
+                         shed_frac=orep.shed_frac)
+    csv_row(f"{tag},{ENGINE},oracle_divergences", len(wrep.divergences),
+            f"journal_batches={len(journal)};bit_exact={bit_exact}")
+
+    # -- background vs sync maintenance under identical load -----------------
+    sec["maintenance_compare"] = {}
+    modes = (("background", True), ("sync", False)) if bg_main \
+        else (("sync", False),)
+    cmp_rate = 0.8 * sat
+    for label, bg in modes:
+        print(f"# serve: {preset} maintenance={label} at 80% saturation")
+        cix = _serve_index(keys, background=bg, telemetry=False)
+        _warm_serve_buckets(cix, keys, scfg)
+        cfe = ServeFrontend(cix, scfg, journal=False)
+        ctap = _StreamTap(spec.scaled(seed=spec.seed + 1531), keys)
+        # 2x leg length: the comparison must cross the overlay-cap merge
+        # threshold so maintenance actually runs inside the timed window
+        crep = open_loop(cfe, ctap.take(2 * _serve_leg_ops(cmp_rate)),
+                         cmp_rate, n_clients=N_SERVE_CLIENTS,
+                         timeout_s=240.0)
+        cfe.close()
+        st = cix.stats()
+        d = _leg_brief(crep)
+        d["n_merges"] = st.get("n_merges")
+        lat = crep.latency_ms().get("lookup", {})
+        d["lookup_ms_p50"] = lat.get("ms_p50")
+        d["lookup_ms_p999"] = lat.get("ms_p999")
+        sec["maintenance_compare"][label] = d
+        cix.close()
+        csv_row(f"{tag},{ENGINE},maint_{label}_p99",
+                d["lookup_ms_p99"] or 0.0,
+                f"achieved={d['achieved_ops_per_s']:.0f};"
+                f"merges={d['n_merges']};rate={cmp_rate:.0f}")
+    if bg_main and "background" in sec["maintenance_compare"]:
+        b = sec["maintenance_compare"]["background"]
+        s = sec["maintenance_compare"]["sync"]
+        if b["lookup_ms_p99"] and s["lookup_ms_p99"]:
+            sec["maintenance_compare"]["p99_speedup_bg_over_sync"] = \
+                s["lookup_ms_p99"] / b["lookup_ms_p99"]
+    return {tag: sec}
+
+
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
        table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
@@ -781,6 +1004,16 @@ def main() -> None:
                          "through the --engine facade with oracle "
                          "checking; one workload,<preset> section each; "
                          "BENCH_WORKLOAD_OPS sizes them")
+    ap.add_argument("--serve", default="",
+                    help="comma-separated workload presets driven through "
+                         "the concurrent serving front-end (repro.serve) "
+                         "under open-loop load on --engine: saturation "
+                         "ramp, p50/p99/p999 at 50/80/95%% of saturation, "
+                         "journal-replay oracle equivalence, and a "
+                         "background-vs-sync maintenance comparison; one "
+                         "serve,<preset> section each (BENCH_SERVE_OPS / "
+                         "BENCH_SERVE_CLIENTS / BENCH_SERVE_REQ_OPS size "
+                         "them)")
     ap.add_argument("--durability", action="store_true",
                     help="measure the durability subsystem on --engine: "
                          "ycsb_a WAL-append overhead (off vs "
@@ -805,7 +1038,8 @@ def main() -> None:
     global ENGINE, METRICS_JSON
     ENGINE = args.engine
     METRICS_JSON = args.metrics_json
-    if args.only or not (args.pr2_json or args.workload or args.durability):
+    if args.only or not (args.pr2_json or args.workload or args.durability
+                         or args.serve):
         for fn in ALL:
             if args.only and args.only not in fn.__name__:
                 continue
@@ -815,6 +1049,9 @@ def main() -> None:
         for preset in args.workload.split(","):
             wl_sections.update(workload_bench(preset.strip(),
                                               args.maintenance))
+    if args.serve:
+        for preset in args.serve.split(","):
+            wl_sections.update(serve_bench(preset.strip()))
     if args.durability:
         wl_sections.update(durability_bench())
     if args.pr2_json:

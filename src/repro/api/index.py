@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from dataclasses import replace
 
@@ -34,12 +35,31 @@ from .engines import ENGINE_CLASSES, Engine
 class LearnedIndex:
     """Engine-agnostic DILI facade.  All inputs/outputs are host numpy;
     device placement, sharding, kernel dispatch, overlay/merge scheduling,
-    and depth threading are the engine's business."""
+    and depth threading are the engine's business.
+
+    Threading contract (DESIGN.md sections 8/15):
+
+      * ONE logical writer: the engines' overlay/merge machinery assumes
+        a single mutating caller.  The facade enforces it — `upsert`,
+        `delete`, and `flush` serialize on an internal RLock, so
+        accidental concurrent writers are safe (they queue) but the
+        intended deployment is a single writer thread (the serving
+        front-end's batcher is exactly that).  The lock also keeps the
+        WAL-append -> engine-apply pair atomic, preserving the
+        durability ordering contract under contention.
+      * Reads (`lookup`/`range`/`get`/`items`) are lock-free: they
+        resolve against the current published snapshot + a functional
+        overlay reference, which engine publication swaps atomically.
+      * `stats()` and `metrics()` are safe to sample from ANY thread
+        while the writer runs — they read counters and copied dicts,
+        never partial engine state (hammered by tests/test_serve.py).
+    """
 
     def __init__(self, engine: Engine, config: IndexConfig):
         self._engine = engine
         self.config = config
         self._dur = None        # DurabilityManager when config.durability
+        self._write_lock = threading.RLock()
 
     # -- construction --------------------------------------------------------
 
@@ -186,15 +206,16 @@ class LearnedIndex:
         if not np.isfinite(keys).all():
             raise ValueError("keys must be finite")
         tel = self._engine.telemetry
-        if tel.enabled:
-            t0 = time.perf_counter()
-            self._log_write(OP_UPSERT, keys, vals)
-            self._engine.upsert(keys, vals)
-            tel.record_op("upsert", time.perf_counter() - t0, len(keys))
-        else:
-            tel.count_ops(len(keys))
-            self._log_write(OP_UPSERT, keys, vals)
-            self._engine.upsert(keys, vals)
+        with self._write_lock:
+            if tel.enabled:
+                t0 = time.perf_counter()
+                self._log_write(OP_UPSERT, keys, vals)
+                self._engine.upsert(keys, vals)
+                tel.record_op("upsert", time.perf_counter() - t0, len(keys))
+            else:
+                tel.count_ops(len(keys))
+                self._log_write(OP_UPSERT, keys, vals)
+                self._engine.upsert(keys, vals)
 
     def delete(self, keys) -> None:
         """Delete (Alg. 8 at merge time); visible immediately."""
@@ -202,15 +223,16 @@ class LearnedIndex:
         if not np.isfinite(keys).all():
             raise ValueError("keys must be finite")
         tel = self._engine.telemetry
-        if tel.enabled:
-            t0 = time.perf_counter()
-            self._log_write(OP_DELETE, keys, None)
-            self._engine.delete(keys)
-            tel.record_op("delete", time.perf_counter() - t0, len(keys))
-        else:
-            tel.count_ops(len(keys))
-            self._log_write(OP_DELETE, keys, None)
-            self._engine.delete(keys)
+        with self._write_lock:
+            if tel.enabled:
+                t0 = time.perf_counter()
+                self._log_write(OP_DELETE, keys, None)
+                self._engine.delete(keys)
+                tel.record_op("delete", time.perf_counter() - t0, len(keys))
+            else:
+                tel.count_ops(len(keys))
+                self._log_write(OP_DELETE, keys, None)
+                self._engine.delete(keys)
 
     def _log_write(self, op: int, keys: np.ndarray,
                    vals: np.ndarray | None) -> None:
@@ -228,15 +250,16 @@ class LearnedIndex:
         returns `stats()` afterwards.  With background maintenance this is
         the synchronous barrier (drains the worker first)."""
         tel = self._engine.telemetry
-        if tel.enabled:
-            t0 = time.perf_counter()
-            self._engine.flush()
-            tel.record_op("flush", time.perf_counter() - t0)
-        else:
-            tel.count_ops(1)
-            self._engine.flush()
-        if self._dur is not None:
-            self._dur.sync()    # flush doubles as the durability barrier
+        with self._write_lock:
+            if tel.enabled:
+                t0 = time.perf_counter()
+                self._engine.flush()
+                tel.record_op("flush", time.perf_counter() - t0)
+            else:
+                tel.count_ops(1)
+                self._engine.flush()
+            if self._dur is not None:
+                self._dur.sync()  # flush doubles as the durability barrier
         return self.stats()
 
     def close(self) -> None:

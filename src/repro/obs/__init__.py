@@ -11,11 +11,13 @@ engines carry a `Telemetry`, the facade times ops into it,
 from .metrics import (LatencyHistogram, MetricsRegistry, PERCENTILES,
                       latency_summary)
 from .telemetry import NULL_TELEMETRY, OPS, SCHEMA_VERSION, Telemetry
-from .tracing import MERGE_SPANS, RECOVERY_SPANS, Span, SpanRecorder
+from .tracing import (MERGE_SPANS, RECOVERY_SPANS, SERVE_SPANS, Span,
+                      SpanRecorder)
 from . import watchdog
 
 __all__ = [
     "LatencyHistogram", "MetricsRegistry", "PERCENTILES", "latency_summary",
     "NULL_TELEMETRY", "OPS", "SCHEMA_VERSION", "Telemetry",
-    "MERGE_SPANS", "RECOVERY_SPANS", "Span", "SpanRecorder", "watchdog",
+    "MERGE_SPANS", "RECOVERY_SPANS", "SERVE_SPANS", "Span", "SpanRecorder",
+    "watchdog",
 ]

@@ -154,9 +154,16 @@ class MetricsRegistry:
         h.record(seconds)
 
     def snapshot(self) -> dict:
-        """Stable JSON-able export: plain ints/floats only."""
+        """Stable JSON-able export: plain ints/floats only.
+
+        Safe to sample while another thread records: each dict is copied
+        atomically (`dict()` over a live dict is one bytecode) before the
+        sorted iteration, so a concurrent counter/gauge/histogram
+        registration can't RuntimeError the export — it simply lands in
+        this snapshot or the next.  Histogram summaries read live bucket
+        counts; a race there skews one sample at most."""
+        hists = dict(self.histograms)
         return dict(
-            counters=dict(sorted(self.counters.items())),
-            gauges=dict(sorted(self.gauges.items())),
-            histograms={k: self.histograms[k].summary()
-                        for k in sorted(self.histograms)})
+            counters=dict(sorted(dict(self.counters).items())),
+            gauges=dict(sorted(dict(self.gauges).items())),
+            histograms={k: hists[k].summary() for k in sorted(hists)})

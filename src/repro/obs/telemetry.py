@@ -128,6 +128,11 @@ class Telemetry:
             enabled=self.enabled,
             ops_total=self.ops_total,
             ops={op: m["histograms"][f"op.{op}"] for op in OPS},
+            # serving-front-end histograms (e2e latency per op, batch
+            # sizes) appear only once a `RequestBatcher` attached and
+            # declared them — {} on a bare index, same on every engine
+            serve={k: v for k, v in m["histograms"].items()
+                   if k.startswith("serve.")},
             counters=m["counters"],
             gauges=m["gauges"],
             spans=self.spans.summary(),

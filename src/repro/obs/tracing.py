@@ -46,6 +46,18 @@ MERGE_SPANS = ("merge.queue_wait", "merge.fold", "merge.retrain",
 
 RECOVERY_SPANS = ("recovery.load", "recovery.replay", "recovery.publish")
 
+# Serving front-end taxonomy (DESIGN.md section 15).  NOT part of the
+# default declaration: a bare index exports exactly the merge + recovery
+# span set (pinned by the telemetry schema tests); the serve spans join a
+# Telemetry bundle only when a `RequestBatcher` attaches to the index,
+# via `SpanRecorder.declare`.
+#
+#   serve.queue_wait — head request's submit -> worker dispatch (the
+#                      admission-queue delay component of e2e latency)
+#   serve.exec       — one coalesced facade batch, dispatch -> results
+#                      sliced back to clients (attr `op`)
+SERVE_SPANS = ("serve.queue_wait", "serve.exec")
+
 
 @dataclass(frozen=True)
 class Span:
@@ -78,6 +90,14 @@ class SpanRecorder:
         finally:
             self.record(name, time.perf_counter() - t0, t0=t0, **attrs)
 
+    def declare(self, *names: str) -> None:
+        """Add span names to the exported taxonomy (zero-count until
+        recorded).  Late opt-in for subsystems that aren't part of every
+        index — e.g. the serving front-end declares `SERVE_SPANS` on
+        attach, so only served indexes export them."""
+        for name in names:
+            self._durations.setdefault(name, [])
+
     def spans(self, name: str | None = None) -> list[Span]:
         return [s for s in self.ring if name is None or s.name == name]
 
@@ -86,6 +106,11 @@ class SpanRecorder:
 
     def summary(self) -> dict:
         """{span name: shared percentile summary} over every declared or
-        recorded span name — JSON-able, stable key set per taxonomy."""
-        return {name: latency_summary(durs)
-                for name, durs in sorted(self._durations.items())}
+        recorded span name — JSON-able, stable key set per taxonomy.
+
+        Safe to call while another thread records: the name dict and each
+        duration list are snapshotted atomically (`dict()`/`list()` are
+        single bytecodes over the live object), so a concurrent append
+        lands in this summary or the next, never in a RuntimeError."""
+        return {name: latency_summary(list(durs))
+                for name, durs in sorted(dict(self._durations).items())}

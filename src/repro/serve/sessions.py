@@ -12,16 +12,27 @@ changes the `IndexConfig`.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from ..api import IndexConfig, LearnedIndex, MergePolicy
 
 
 class SessionTable:
+    """Thread-safe from any number of frontend threads: slot allocation
+    and the admit/evict check-then-act pairs serialize on one RLock, so
+    two concurrent admits of the same session id cannot both pass the
+    duplicate check, and a slot is never handed out twice.  Index I/O
+    goes either straight to the facade (standalone) or — after
+    `serve_through(frontend)` — through a `ServeClient`, so session
+    traffic coalesces with everything else the batcher serves."""
+
     def __init__(self, n_slots: int, warm_ids=None,
                  policy: MergePolicy | None = None,
                  config: IndexConfig | None = None):
         self.n_slots = n_slots
+        self._lock = threading.RLock()
         self.free = list(range(n_slots))[::-1]
         warm = np.asarray(sorted(warm_ids or [1.0, 2.0]), np.float64)
         slots = np.array([self._take() for _ in warm], np.int64)
@@ -34,6 +45,21 @@ class SessionTable:
             overlay_cap=64,
             merge=policy or MergePolicy(max_fill=1.0, max_writes=256))
         self.index = LearnedIndex.build(warm, slots, config=cfg)
+        self._frontend = None
+        self._io = self.index      # facade, or a ServeClient once served
+
+    def serve_through(self, frontend) -> "SessionTable":
+        """Route this table's index traffic through a serving front-end
+        (`repro.serve.ServeFrontend` over the SAME index).  After this,
+        admits/evicts/lookups are batcher requests — coalesced with
+        other clients, admission-controlled, journaled — and the table
+        may be driven from many threads."""
+        if frontend.index is not self.index:
+            raise ValueError("frontend serves a different index")
+        with self._lock:
+            self._frontend = frontend
+            self._io = frontend.client("sessions")
+        return self
 
     def _take(self) -> int:
         if not self.free:
@@ -51,24 +77,34 @@ class SessionTable:
         return self.index.host
 
     def admit(self, session_id: float) -> int:
+        # the whole check-take-write sequence holds the lock: a racing
+        # admit of the same id must see either the KeyError or the slot,
+        # never a double allocation (the upsert ack is the batcher's or
+        # facade's business; both return only once the write is applied)
         sid = float(session_id)
-        if self.index.get(sid) is not None:
-            raise KeyError(f"session {session_id} already admitted")
-        slot = self._take()
-        self.index.upsert(sid, slot)
+        with self._lock:
+            if self._io.get(sid) is not None:
+                raise KeyError(f"session {session_id} already admitted")
+            slot = self._take()
+            self._io.upsert(sid, slot)
         return slot
 
     def evict(self, session_id: float) -> None:
         sid = float(session_id)
-        slot = self.index.get(sid)
-        if slot is None:
-            raise KeyError(session_id)
-        self.index.delete(sid)
-        self.free.append(int(slot))
+        with self._lock:
+            slot = self._io.get(sid)
+            if slot is None:
+                raise KeyError(session_id)
+            self._io.delete(sid)
+            self.free.append(int(slot))
 
     def flush(self):
-        """Force a merge+publish (e.g. before a latency-critical window)."""
+        """Force a merge+publish (e.g. before a latency-critical window);
+        when served, drains in-flight requests first."""
+        if self._frontend is not None:
+            return self._frontend.flush()
         return self.index.flush()
 
     def lookup_batch(self, session_ids) -> tuple[np.ndarray, np.ndarray]:
-        return self.index.lookup(np.asarray(session_ids, np.float64))
+        # lock-free: reads need no slot-allocation consistency
+        return self._io.lookup(np.asarray(session_ids, np.float64))
