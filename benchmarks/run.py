@@ -18,7 +18,11 @@ cost scales with tree height and range cost with hits, not with table size.
 comparing against benchmarks/baseline_pre_pr2.json (captured on the pre-PR-2
 tree with the same datasets/scales), extended since the api redesign with
 facade sections measured through `repro.api.LearnedIndex` on the engine
-selected by ``--engine {local,pallas,sharded}``.
+selected by ``--engine {local,pallas,sharded}``.  Every section carries its
+own ``n_keys`` stamp, and ``--pr2-extend`` merges a run at a DIFFERENT
+scale (e.g. BENCH_N_KEYS=10000000 with ``--scale`` and ``--workload``)
+into the existing artifact under ``@n=<scale>``-suffixed keys, leaving the
+original sections byte-identical.
 """
 
 from __future__ import annotations
@@ -444,6 +448,10 @@ def _maint_config(mode: str):
     from repro.api import MaintenanceConfig
     if mode == "off":
         return None
+    if mode == "norecluster":
+        # incremental maintenance with locality re-clustering disabled —
+        # the ablation leg of --maintenance recluster-compare
+        return MaintenanceConfig(recluster=False)
     return MaintenanceConfig(background=(mode == "background"))
 
 
@@ -484,10 +492,18 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
     spec = PRESETS[preset].scaled(n_ops=N_WORKLOAD_OPS,
                                   batch_size=N_WORKLOAD_BATCH)
     keys = workload_universe()
-    suffixes = {"off": "", "incremental": ",maint", "background": ",bg"}
-    runs = ([("", "off"), (",maint", "incremental")]
-            if maint_mode == "compare" else
-            [(suffixes[maint_mode], maint_mode)])
+    suffixes = {"off": "", "incremental": ",maint", "background": ",bg",
+                "norecluster": ",maint,norecluster"}
+    if maint_mode == "compare":
+        runs = [("", "off"), (",maint", "incremental")]
+    elif maint_mode == "recluster-compare":
+        # the zipfian splice-locality ablation: incremental maintenance
+        # with vs without heat-driven segment re-clustering — the merge
+        # p50 / dirty-row-fraction delta re-clustering buys
+        runs = [(",maint", "incremental"),
+                (",maint,norecluster", "norecluster")]
+    else:
+        runs = [(suffixes[maint_mode], maint_mode)]
     sections: dict = {}
     for suffix, mode in runs:
         print(f"# workload: {preset} on the '{ENGINE}' engine "
@@ -501,6 +517,8 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
         rep = WorkloadRunner(ix).run(generate_stream(spec, keys), spec=spec)
         d = rep.to_json_dict()
         d["maintenance"] = mode
+        d["n_keys"] = len(keys)     # per-section scale stamp: sections at
+        # different BENCH_N_KEYS coexist in one artifact self-describingly
         # flush = the synchronous barrier: folds the tail of pending
         # writes and drains any in-flight background merge, so the
         # reported counts/percentiles are deterministic and complete
@@ -518,6 +536,8 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
         d.update(_latency_percentiles(ix.maint_timings()))
         d["n_retrains"] = st["n_retrains"]
         d["n_incremental_flattens"] = st["n_incremental_flattens"]
+        d["n_reclusters"] = st.get("n_reclusters", 0)
+        d["n_forced_full_flattens"] = st.get("n_forced_full_flattens", 0)
         # retrace watchdog: the runner marked warm after its warmup
         # batches, so any later trace is a regression (the PR-4 bug class)
         m = ix.metrics()
@@ -607,6 +627,7 @@ def durability_bench() -> dict:
             ops_per_s[label] = rep.ops_per_s
         overhead = 1.0 - ops_per_s["interval"] / ops_per_s["off"]
         sections["durability,wal_overhead"] = dict(
+            n_keys=len(keys),
             preset="ycsb_a", engine=ENGINE, fsync="interval",
             checkpoint_every_merges=8,
             n_ops=spec.n_ops, base_ops_per_s=ops_per_s["off"],
@@ -637,6 +658,7 @@ def durability_bench() -> dict:
         m = rix.metrics()
         spans = m["spans"]
         sections["durability,recovery"] = dict(
+            n_keys=len(keys),
             engine=ENGINE, tail_records=N_RECOVERY_RECORDS,
             recovery_s=recovery_s,
             replayed_records=int(m["counters"]
@@ -663,6 +685,7 @@ def durability_bench() -> dict:
                                      spec=spec, name="ycsb_a")
         runner.index.close()
         sections["durability,kill_recover"] = dict(
+            n_keys=len(keys),
             engine=ENGINE, preset="ycsb_a",
             kill_at_batch=kr["kill_at_batch"],
             recovery_s=kr["recovery_s"],
@@ -788,7 +811,7 @@ def serve_bench(preset: str) -> dict:
     scfg = ServeConfig()
     bg_main = ENGINE == "local"     # background maintenance is local-only
     tag = f"serve,{preset}"
-    sec: dict = dict(engine=ENGINE, preset=preset,
+    sec: dict = dict(engine=ENGINE, preset=preset, n_keys=len(keys),
                      n_clients=N_SERVE_CLIENTS, req_ops=N_SERVE_REQ_OPS,
                      background_maintenance=bg_main)
 
@@ -901,6 +924,69 @@ def serve_bench(preset: str) -> dict:
     return {tag: sec}
 
 
+def scale_bench() -> dict:
+    """Scale sections for BENCH_PR2.json (``--scale``): build cost, peak
+    memory footprint, and depth-resolved traversal cost at the CURRENT
+    BENCH_N_KEYS, over the int64-valued workload universe (the same keys
+    the oracle-checked workload legs use, so the numbers describe the
+    serving configuration end to end).
+
+      scale,build      bulk_load + flatten wall seconds, process peak RSS
+                       (`peak_rss_mb` — the memory-footprint field the CI
+                       scale leg asserts on), snapshot bytes/key, splice
+                       segment count, and tree height stats
+      scale,traversal  lookup ns/query at the REAL tree height of this
+                       scale, decomposed per level (nodes walked) and per
+                       memory touch (nodes + slot probes) — how lookup
+                       cost actually grows with cardinality, not a
+                       fixed-depth extrapolation
+    """
+    import resource
+    import time as _t
+    keys = workload_universe()
+    print(f"# scale: build + traversal at n_keys={len(keys)}")
+    t0 = _t.perf_counter()
+    d = bulk_load(keys, sample_stride=4)
+    build_s = _t.perf_counter() - t0
+    t0 = _t.perf_counter()
+    f = flatten(d)
+    flatten_s = _t.perf_counter() - t0
+    idx = DeviceSnapshot.from_flat(f)
+    # ru_maxrss is KiB on Linux: the high-water mark across build+flatten
+    # (host tree + snapshot both live), the number a capacity plan needs
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    s = d.stats()
+    sections: dict = {}
+    sections["scale,build"] = dict(
+        n_keys=len(keys), build_s=build_s, flatten_s=flatten_s,
+        peak_rss_mb=peak_rss_mb, flat_mb=f.nbytes() / 2 ** 20,
+        bytes_per_key=f.nbytes() / len(keys), n_segments=f.n_segments,
+        max_depth=f.max_depth, avg_height=s["avg_height"],
+        conflicts_per_1k=1000.0 * s["conflicts"] / len(keys))
+    csv_row(f"scale,build,n={len(keys)}", build_s,
+            f"flatten_s={flatten_s:.2f};peak_rss_mb={peak_rss_mb:.0f};"
+            f"bytes_per_key={f.nbytes() / len(keys):.1f};"
+            f"segments={f.n_segments};max_depth={f.max_depth}")
+    rng = np.random.default_rng(31)
+    q = jnp.asarray(keys[rng.integers(0, len(keys), N_QUERIES)])
+    t = time_fn(lambda q: S.search_batch(idx, q, early_exit=True), q)
+    v, fnd, nodes, probes = S.search_batch(idx, q, with_stats=True)
+    assert bool(np.asarray(fnd).all())
+    mean_nodes = float(np.asarray(nodes).mean())
+    mean_probes = float(np.asarray(probes).mean())
+    ns = t / N_QUERIES * 1e9
+    sections["scale,traversal"] = dict(
+        n_keys=len(keys), ns_per_query=ns, max_depth=f.max_depth,
+        mean_nodes=mean_nodes, mean_probes=mean_probes,
+        ns_per_level=ns / max(mean_nodes, 1.0),
+        ns_per_touch=ns / max(mean_nodes + mean_probes, 1.0))
+    csv_row(f"scale,traversal,n={len(keys)}", ns,
+            f"max_depth={f.max_depth};nodes={mean_nodes:.2f};"
+            f"probes={mean_probes:.2f};"
+            f"ns_per_level={ns / max(mean_nodes, 1.0):.1f}")
+    return sections
+
+
 ALL = [table4_lookup, table5_access, table6_stats, fig6_memory_range,
        fig7_workloads, fig8_deletions, table78_hyperparams, table9_breakdown,
        table10_12_13_appendix, fig9_scale, fig10_shift, online_mixed,
@@ -942,6 +1028,7 @@ def bench_pr2(out_path: str, extra_sections: dict | None = None) -> dict:
         old = base_sec.get(f"point_lookup,{name}", {})
         old_ns = old.get("ns_per_query")
         out["sections"][f"point_lookup,{name}"] = dict(
+            n_keys=N_KEYS,
             ns_per_query=new_ns, pre_pr_ns_per_query=old_ns,
             speedup=(old_ns / new_ns) if old_ns else None,
             max_depth=f.max_depth)
@@ -958,6 +1045,7 @@ def bench_pr2(out_path: str, extra_sections: dict | None = None) -> dict:
         oldr = base_sec.get(f"range_query,{name}", {})
         old_us = oldr.get("us_per_query")
         out["sections"][f"range_query,{name}"] = dict(
+            n_keys=N_KEYS,
             us_per_query=new_us, pre_pr_us_per_query=old_us,
             speedup=(old_us / new_us) if old_us else None,
             n_pairs=f.n_pairs)
@@ -968,9 +1056,9 @@ def bench_pr2(out_path: str, extra_sections: dict | None = None) -> dict:
         # included) — same recipe as `--only facade` (_facade_measure)
         lookup_ns, range_us = _facade_measure(name)
         out["sections"][f"facade_lookup,{name}"] = dict(
-            ns_per_query=lookup_ns, engine=ENGINE)
+            n_keys=N_KEYS, ns_per_query=lookup_ns, engine=ENGINE)
         out["sections"][f"facade_range,{name}"] = dict(
-            us_per_query=range_us, engine=ENGINE)
+            n_keys=N_KEYS, us_per_query=range_us, engine=ENGINE)
         csv_row(f"pr2,facade_lookup,{name}", lookup_ns, f"engine={ENGINE}")
         csv_row(f"pr2,facade_range,{name}", range_us, f"engine={ENGINE}")
     if extra_sections:
@@ -980,6 +1068,30 @@ def bench_pr2(out_path: str, extra_sections: dict | None = None) -> dict:
     with open(out_path, "w") as fh:
         json.dump(out, fh, indent=1)
     print(f"# wrote {out_path}")
+    return out
+
+
+def bench_pr2_extend(out_path: str, extra_sections: dict) -> dict:
+    """Merge this run's sections into an EXISTING BENCH_PR2.json without
+    re-measuring (or perturbing a single byte of) what is already there —
+    how different-scale runs accumulate in one trajectory artifact.
+
+    Every section this run emits carries its own `n_keys` stamp; when the
+    run's scale differs from the artifact's top-level `n_keys`, the new
+    section keys additionally get an `@n=<scale>` suffix so a 10M
+    `workload,ycsb_a,maint` lands NEXT TO the 300k section of the same
+    name instead of overwriting it."""
+    import json
+    from common import N_KEYS
+    with open(out_path) as fh:
+        out = json.load(fh)
+    suffix = "" if out.get("n_keys") == N_KEYS else f"@n={N_KEYS}"
+    for tag, sec in extra_sections.items():
+        out["sections"][tag + suffix] = sec
+    with open(out_path, "w") as fh:
+        json.dump(out, fh, indent=1)
+    print(f"# extended {out_path} with {len(extra_sections)} section(s)"
+          f"{' at n_keys=' + str(N_KEYS) if suffix else ''}")
     return out
 
 
@@ -1014,6 +1126,17 @@ def main() -> None:
                          "serve,<preset> section each (BENCH_SERVE_OPS / "
                          "BENCH_SERVE_CLIENTS / BENCH_SERVE_REQ_OPS size "
                          "them)")
+    ap.add_argument("--scale", action="store_true",
+                    help="measure build time, peak RSS memory footprint, "
+                         "and depth-resolved traversal cost at the current "
+                         "BENCH_N_KEYS (scale,build + scale,traversal "
+                         "sections)")
+    ap.add_argument("--pr2-extend", default="",
+                    help="merge this run's sections into an EXISTING "
+                         "BENCH_PR2.json instead of regenerating it; "
+                         "pre-existing sections stay byte-identical, and "
+                         "sections measured at a different BENCH_N_KEYS "
+                         "than the artifact get an @n=<scale> key suffix")
     ap.add_argument("--durability", action="store_true",
                     help="measure the durability subsystem on --engine: "
                          "ycsb_a WAL-append overhead (off vs "
@@ -1027,24 +1150,32 @@ def main() -> None:
                          "(per-op histograms, merge-pipeline spans, retrace "
                          "watchdog) here, keyed by workload section")
     ap.add_argument("--maintenance", default="off",
-                    choices=("off", "incremental", "background", "compare"),
+                    choices=("off", "incremental", "background", "compare",
+                             "norecluster", "recluster-compare"),
                     help="merge pipeline for --workload runs: legacy full "
                          "flatten (default — keeps pre-PR5 invocations at "
                          "their original cost), adaptive (splice+retrain), "
-                         "background thread, or 'compare' = off AND "
+                         "background thread, 'compare' = off AND "
                          "incremental back-to-back (records the latency "
-                         "delta; what BENCH_PR2.json is emitted with)")
+                         "delta; what BENCH_PR2.json is emitted with), "
+                         "'norecluster' = adaptive with segment "
+                         "re-clustering disabled, or 'recluster-compare' "
+                         "= adaptive with AND without re-clustering "
+                         "back-to-back (the zipfian splice-locality "
+                         "ablation)")
     args = ap.parse_args()
     global ENGINE, METRICS_JSON
     ENGINE = args.engine
     METRICS_JSON = args.metrics_json
-    if args.only or not (args.pr2_json or args.workload or args.durability
-                         or args.serve):
+    if args.only or not (args.pr2_json or args.pr2_extend or args.workload
+                         or args.durability or args.serve or args.scale):
         for fn in ALL:
             if args.only and args.only not in fn.__name__:
                 continue
             fn()
     wl_sections: dict = {}
+    if args.scale:
+        wl_sections.update(scale_bench())
     if args.workload:
         for preset in args.workload.split(","):
             wl_sections.update(workload_bench(preset.strip(),
@@ -1056,6 +1187,8 @@ def main() -> None:
         wl_sections.update(durability_bench())
     if args.pr2_json:
         bench_pr2(args.pr2_json, extra_sections=wl_sections)
+    elif args.pr2_extend:
+        bench_pr2_extend(args.pr2_extend, wl_sections)
     if args.metrics_json:
         with open(args.metrics_json, "w") as fh:
             json.dump(dict(engine=ENGINE, schema="dili.metrics/1",

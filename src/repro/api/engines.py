@@ -25,6 +25,7 @@ then the (small, sorted) overlay window is merged host-side per query.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -39,7 +40,7 @@ from ..core.distributed import (build_sharded, combined_overlay_arrays,
                                 sharded_upsert, shard_of, to_mesh)
 from ..core.flat import flatten, merge_sorted_runs
 from ..maintain import (IncrementalFlattener, LeafAccounting,
-                        fold_with_accounting, run_retrains)
+                        fold_with_accounting, run_reclusters, run_retrains)
 from ..obs import Telemetry, watchdog
 from ..online.merge import OnlineIndex, adjust_pressure
 from ..online.overlay import (TombstoneOverlay, fold_overlay,
@@ -130,13 +131,20 @@ def _overlay_summary(overlays) -> dict:
 
 def _maint_summary(*, n_full: int, n_incremental: int, n_retrains: int,
                    dirty_row_fraction: float, queue_depth: int = 0,
-                   errors: int = 0) -> dict:
+                   errors: int = 0, n_reclusters: int = 0,
+                   n_forced_full: int = 0) -> dict:
     """The engine-independent maintenance slice of `stats()` (pinned by
-    tests/test_api_engines.py): flatten kind counts, subtree retrains, the
-    last merge's dirty-row fraction, and the background queue depth (0 on
-    engines without a scheduler)."""
+    tests/test_api_engines.py): flatten kind counts, subtree retrains and
+    locality re-clusters, the last merge's dirty-row fraction, the
+    background queue depth (0 on engines without a scheduler), and the
+    forced-full-flatten count (`n_forced_full_flattens`: full re-flattens
+    the incremental flattener was FORCED into by an unmappable dirty id —
+    distinct from intentional full flattens, nonzero means the O(dirty)
+    guarantee silently degraded)."""
     return dict(n_full_flattens=n_full, n_incremental_flattens=n_incremental,
-                n_retrains=n_retrains, dirty_row_fraction=dirty_row_fraction,
+                n_retrains=n_retrains, n_reclusters=n_reclusters,
+                n_forced_full_flattens=n_forced_full,
+                dirty_row_fraction=dirty_row_fraction,
                 maint_queue_depth=queue_depth, maint_errors=errors)
 
 
@@ -162,6 +170,14 @@ class EngineTelemetryBase:
     """
 
     telemetry: Telemetry
+
+    #: locality re-cluster count; engines with the maintenance subsystem
+    #: override (property or instance counter)
+    n_reclusters: int = 0
+
+    def _n_forced_full_flattens(self) -> int:
+        """Unmappable-dirty-id fallbacks across the engine's flatteners."""
+        return 0
 
     def _stats_extra(self) -> dict:
         return {}
@@ -213,7 +229,9 @@ class EngineTelemetryBase:
                         n_retrains=self.n_retrains,
                         dirty_row_fraction=self.last_dirty_frac,
                         queue_depth=self._queue_depth(),
-                        errors=len(errors)),
+                        errors=len(errors),
+                        n_reclusters=self.n_reclusters,
+                        n_forced_full=self._n_forced_full_flattens()),
                     maint_degraded=self._maint_degraded(),
                     maint_error_logs=list(errors),
                     telemetry_enabled=self.telemetry.enabled,
@@ -436,6 +454,14 @@ class LocalEngine(EngineTelemetryBase):
         return self.oi.n_retrains
 
     @property
+    def n_reclusters(self) -> int:
+        return self.oi.n_reclusters
+
+    def _n_forced_full_flattens(self) -> int:
+        fl = self.oi.flattener
+        return 0 if fl is None else fl.n_fallback_full
+
+    @property
     def last_dirty_frac(self) -> float:
         return self.oi.last_dirty_frac
 
@@ -492,7 +518,8 @@ class PallasEngine(EngineTelemetryBase):
         self.flattener = (IncrementalFlattener()
                           if m is not None and m.incremental else None)
         self.accounting = (LeafAccounting(m)
-                           if m is not None and m.retrain else None)
+                           if m is not None and (m.retrain or m.recluster)
+                           else None)
         k32, v64 = self._quantize(keys, vals)
         with placement_dtype(np.float32):
             self.dili = bulk_load(k32, v64, **cfg.bulk_load_kw())
@@ -504,11 +531,15 @@ class PallasEngine(EngineTelemetryBase):
         self.n_incremental_flattens = 0
         self.n_merges = 0
         self.n_retrains = 0
+        self.n_reclusters = 0
         self.last_dirty_frac = 1.0
         self._timings: list[dict] = []
         self._writes_since_publish = 0
         self._writes_since_pressure = 0
         self._publish()
+
+    def _n_forced_full_flattens(self) -> int:
+        return 0 if self.flattener is None else self.flattener.n_fallback_full
 
     @staticmethod
     def _check_vals_i32(vals: np.ndarray) -> np.ndarray:
@@ -524,12 +555,28 @@ class PallasEngine(EngineTelemetryBase):
 
     @classmethod
     def _quantize(cls, keys, vals) -> tuple[np.ndarray, np.ndarray]:
-        """Cast keys to f32; collapse post-cast duplicates last-write-wins."""
+        """Cast keys to f32; collapse post-cast duplicates last-write-wins.
+
+        Build-time collisions are tolerated but no longer silent: in
+        magnitude-dense regions (integer keys with |key| >= 2**24, where
+        f32 spacing exceeds 1) distinct input keys alias to one f32 value
+        and their payloads collapse — a lossy build the caller must be
+        able to see coming before queries return "wrong" neighbors."""
         k32 = np.asarray(keys, np.float64).astype(np.float32)
         order = np.argsort(k32, kind="stable")
         k32, vals = k32[order], cls._check_vals_i32(vals)[order]
         keep = np.ones(len(k32), bool)
         keep[:-1] = k32[:-1] != k32[1:]          # keep the LAST duplicate
+        n_collapsed = int((~keep).sum())
+        if n_collapsed:
+            warnings.warn(
+                f"pallas engine: {n_collapsed} of {len(k32)} build keys "
+                f"collide after f32 quantization and were collapsed "
+                f"last-write-wins. The kernel's f32 key domain represents "
+                f"integers exactly only for |key| < 2**24 (16777216); "
+                f"beyond that, adjacent keys closer than one f32 ulp alias "
+                f"to the same value. Use the local or sharded engine for "
+                f"full f64 key precision.", UserWarning, stacklevel=3)
         return k32[keep].astype(np.float64), vals[keep]
 
     @property
@@ -610,8 +657,26 @@ class PallasEngine(EngineTelemetryBase):
     # -- writes -------------------------------------------------------------
 
     def _quantize_keys(self, keys) -> np.ndarray:
-        return (np.atleast_1d(np.asarray(keys, np.float64))
-                .astype(np.float32).astype(np.float64))
+        """f32-quantize write keys (the documented tolerance rule) — but
+        REJECT integer-valued keys the cast moves.  At |key| >= 2**24 the
+        f32 spacing exceeds 1, so adjacent int64 keys alias to one f32
+        value and the write would silently land on a DIFFERENT logical key
+        (a wrong-neighbor corruption, not a rounding tolerance).
+        Fractional keys stay under the quantize-to-f32 tolerance the
+        engine documents."""
+        k64 = np.atleast_1d(np.asarray(keys, np.float64))
+        k32 = k64.astype(np.float32).astype(np.float64)
+        moved = (k32 != k64) & (np.floor(k64) == k64) & np.isfinite(k64)
+        if moved.any():
+            raise ValueError(
+                f"pallas engine: integer key {k64[moved][0]!r} is not "
+                f"exactly representable in the kernel's f32 key domain "
+                f"(integers are exact only for |key| < 2**24 = 16777216; "
+                f"above that f32 spacing exceeds 1 and adjacent keys "
+                f"alias) — the write would land on {k32[moved][0]!r}, a "
+                f"different logical key. Use the local or sharded engine "
+                f"for int64 keys at this magnitude.")
+        return k32
 
     def upsert(self, keys, vals):
         # overlay reads resolve in int64, but a merge folds these into the
@@ -657,6 +722,15 @@ class PallasEngine(EngineTelemetryBase):
                 with tel.span("merge.retrain"):
                     self.n_retrains += run_retrains(self.dili,
                                                     self.accounting)
+                # still inside placement_dtype: split_leaf's child models
+                # must place slots in the kernel's f32 arithmetic
+                with tel.span("merge.recluster"):
+                    r = run_reclusters(self.dili, self.accounting,
+                                       self.flattener)
+                if r:
+                    self.n_reclusters += r
+                    if tel.enabled:
+                        tel.metrics.count("maint.reclusters", r)
             else:
                 with tel.span("merge.fold"):
                     fold_overlay(self.dili, self.overlay)
@@ -730,12 +804,14 @@ class ShardedEngine(EngineTelemetryBase):
         self._flatteners = ([IncrementalFlattener() for _ in range(n)]
                             if m is not None and m.incremental else None)
         self._accounting = ([LeafAccounting(m) for _ in range(n)]
-                            if m is not None and m.retrain else None)
+                            if m is not None and (m.retrain or m.recluster)
+                            else None)
         self.n_flattens = n                      # build flattened every shard
         self.n_full_flattens = n
         self.n_incremental_flattens = 0
         self.n_merges = 0
         self.n_retrains = 0
+        self.n_reclusters = 0
         self.last_dirty_frac = 1.0
         self.n_publishes = 1
         self._timings: list[dict] = []
@@ -848,6 +924,13 @@ class ShardedEngine(EngineTelemetryBase):
             fold_with_accounting(dili, ov, acct)
         with self.telemetry.span("merge.retrain", shard=r):
             self.n_retrains += run_retrains(dili, acct)
+        fl = self._flatteners[r] if self._flatteners is not None else None
+        with self.telemetry.span("merge.recluster", shard=r):
+            n = run_reclusters(dili, acct, fl)
+        if n:
+            self.n_reclusters += n
+            if self.telemetry.enabled:
+                self.telemetry.metrics.count("maint.reclusters", n)
 
     def _flatten_shard(self, r: int, dili):
         with self.telemetry.span("merge.flatten", shard=r):
@@ -901,6 +984,11 @@ class ShardedEngine(EngineTelemetryBase):
             self._notify_publish()
 
     # -- introspection ------------------------------------------------------
+
+    def _n_forced_full_flattens(self) -> int:
+        if self._flatteners is None:
+            return 0
+        return sum(fl.n_fallback_full for fl in self._flatteners)
 
     @property
     def n_wal_shards(self) -> int:

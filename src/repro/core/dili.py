@@ -750,6 +750,88 @@ def rebuild_subtree(dili: DILI, leaf: Leaf) -> Node | None:
     return node
 
 
+def split_leaf(dili: DILI, leaf: Leaf, n_children: int) -> Internal | None:
+    """Locality re-clustering primitive: replace ONE write-hot leaf with an
+    equal-width `Internal` of `n_children` freshly-fit leaf children.
+
+    `rebuild_subtree` restores model quality but lets the BU-tree cost
+    model pick the layout — which happily keeps a large region as one big
+    leaf, i.e. ONE incremental-flatten segment whose every row re-flattens
+    whenever any key in it is written.  Under zipfian skew with hashed
+    rank-scatter that makes nearly every merge O(n).  This splits the
+    region into `n_children` leaves, each its own splice segment, so
+    subsequent writes dirty only the small child they land in.
+
+    The mutation is the same shape `rebuild_subtree` performs — one parent
+    child-pointer swap; no existing Internal's children list is touched —
+    so the incremental flattener's contract is preserved: the old leaf is
+    a cache miss by identity and everything else splices from cache,
+    bit-identical to a full `flatten()`.  Construction mirrors Alg. 4's
+    `create_internal`/`create_leaf` (Eq. 1 equal-division model, boundary
+    nudge, clip-partition, least-squares + LOCALOPT per child) so routing
+    agrees between host construction and device search.  Returns the new
+    Internal, or None when the leaf is too small, spans no key range, or
+    can no longer be located from the root (already replaced)."""
+    pairs = collect_pairs(leaf)
+    if len(pairs) < 2 or n_children < 2:
+        return None
+    # locate the splice point FIRST (same bail-before-building discipline
+    # as rebuild_subtree)
+    rep = float(pairs[len(pairs) // 2][0])
+    parent: Internal | None = None
+    child_i = -1
+    if dili.root is not leaf:
+        cur: Node = dili.root
+        while isinstance(cur, Internal):
+            i = cur.child_index(rep)
+            child = cur.children[i]
+            if child is leaf:
+                parent, child_i = cur, i
+                break
+            cur = child
+        if parent is None:
+            return None
+
+    keys = np.array([p[0] for p in pairs], np.float64)
+    vals = np.array([p[1] for p in pairs], np.int64)
+    lb = min(float(leaf.lb), float(keys[0]))
+    ub = max(float(leaf.ub), float(keys[-1]))
+    if not (ub > lb) or not np.isfinite(ub - lb):
+        return None
+    fo = int(n_children)
+    node = Internal(lb=lb, ub=ub, a=0.0, b=0.0)
+    node.b = float(PLACE_DTYPE(fo / (ub - lb)))          # Eq. 1
+    node.a = -node.b * lb
+    node.a, _ = nudge_boundary_safe(node.a, node.b, keys)
+    pos = np.clip(predict_np(node.a, node.b, keys).astype(np.int64),
+                  0, fo - 1)
+    starts = np.searchsorted(pos, np.arange(fo), side="left")
+    ends = np.searchsorted(pos, np.arange(fo), side="right")
+    eta = dili.eta
+    for i in range(fo):
+        clo, chi = int(starts[i]), int(ends[i])
+        l = lb + i * (ub - lb) / fo
+        u = lb + (i + 1) * (ub - lb) / fo
+        pd = [(float(keys[j]), int(vals[j])) for j in range(clo, chi)]
+        if not dili.local_optimized:
+            node.children.append(make_dense_leaf(l, u, pd))
+            continue
+        child = Leaf(lb=l, ub=u)
+        m = len(pd)
+        if m >= 2:
+            child.a, child.b = least_squares(
+                keys[clo:chi], np.arange(m, dtype=np.float64))
+        dili.n_conflicts += _count_conflicts_estimate(child, pd, eta)
+        local_opt(child, pd, eta)
+        node.children.append(child)
+
+    if parent is None:
+        dili.root = node
+    else:
+        parent.children[child_i] = node
+    return node
+
+
 def _count_conflicts_estimate(leaf: Leaf, pd: list, eta: float) -> int:
     m = len(pd)
     if m < 2:

@@ -63,6 +63,10 @@ class FlatDILI:
     max_depth: int
     key_lo: float
     key_hi: float
+    # segment metadata: number of splice units (top-level leaf subtrees) the
+    # incremental flattener would cache for this tree — the denominator of
+    # the dirty-segment fraction and the re-clustering layout signal
+    n_segments: int = 0
 
     @property
     def n_nodes(self) -> int:
@@ -89,7 +93,8 @@ class FlatDILI:
                         self.key.astype(dtype), self.val,
                         self.pair_key.astype(dtype), self.pair_val,
                         self.pair_slot, self.root,
-                        self.max_depth, self.key_lo, self.key_hi)
+                        self.max_depth, self.key_lo, self.key_hi,
+                        self.n_segments)
 
 
 def preorder(root) -> list:
@@ -193,7 +198,23 @@ def flatten(dili: DILI) -> FlatDILI:
         pair_slot=pair_slot,
         root=ids[id(dili.root)], max_depth=_max_depth(dili.root),
         key_lo=float(dili.root.lb), key_hi=float(dili.root.ub),
+        n_segments=_n_segments(dili.root),
     )
+
+
+def _n_segments(root) -> int:
+    """Count the splice units (`maintain.flattener._units`'s 'seg' entries):
+    top-level leaf subtrees hanging off Internals, or the root itself when
+    it is a leaf.  O(#internals + #segments), no per-slot work."""
+    n = 0
+    stack = [root]
+    while stack:
+        nd = stack.pop()
+        if isinstance(nd, Internal):
+            stack.extend(nd.children)
+        else:
+            n += 1
+    return n
 
 
 def _max_depth(root) -> int:

@@ -10,7 +10,8 @@ thread against the double-buffered `SnapshotStore`.
 """
 
 from .accounting import (LeafAccount, LeafAccounting, fold_with_accounting,
-                         ks_uniform, leaf_drift, run_retrains)
+                         ks_uniform, leaf_drift, run_reclusters,
+                         run_retrains)
 from .config import MaintenanceConfig
 from .flattener import IncrementalFlattener, SegmentBlock, flatten_segment
 from .scheduler import MaintenanceScheduler
@@ -19,5 +20,5 @@ __all__ = [
     "IncrementalFlattener", "LeafAccount", "LeafAccounting",
     "MaintenanceConfig", "MaintenanceScheduler", "SegmentBlock",
     "flatten_segment", "fold_with_accounting", "ks_uniform", "leaf_drift",
-    "run_retrains",
+    "run_reclusters", "run_retrains",
 ]

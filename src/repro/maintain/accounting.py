@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.dili import DILI, Leaf, rebuild_subtree
+from ..core.dili import DILI, Leaf, rebuild_subtree, split_leaf
 from .config import MaintenanceConfig
 
 
@@ -35,6 +35,11 @@ class LeafAccount:
     writes: int = 0
     deletes: int = 0
     arrivals: list = field(default_factory=list)   # recent upsert keys
+    # write heat (re-clustering signal): epoch of the last write and the
+    # number of CONSECUTIVE merge epochs with at least one write — O(1)
+    # bookkeeping per write, no per-epoch sweep over accounts
+    last_epoch: int = 0
+    hot_streak: int = 0
 
     def note(self, key: float, tomb: bool, window: int) -> None:
         self.writes += 1
@@ -72,9 +77,16 @@ class LeafAccounting:
         self.cfg = cfg
         self._accounts: dict[int, LeafAccount] = {}
         self._touched: set[int] = set()          # since the last plan()
+        self.epoch = 0                           # merge epochs seen
+        self._hot_touched: set[int] = set()      # since the last recluster plan
 
     def __len__(self) -> int:
         return len(self._accounts)
+
+    def begin_epoch(self) -> None:
+        """Advance the merge-epoch counter; called once per merge fold so
+        `hot_streak` measures persistence ACROSS merges, not within one."""
+        self.epoch += 1
 
     def note(self, leaf: Leaf, key: float, tomb: bool) -> None:
         lid = id(leaf)
@@ -82,7 +94,12 @@ class LeafAccounting:
         if acct is None or acct.leaf is not leaf:
             acct = self._accounts[lid] = LeafAccount(leaf)
         acct.note(key, tomb, self.cfg.arrival_window)
+        if acct.last_epoch != self.epoch:
+            acct.hot_streak = (acct.hot_streak + 1
+                               if acct.last_epoch == self.epoch - 1 else 1)
+            acct.last_epoch = self.epoch
         self._touched.add(lid)
+        self._hot_touched.add(lid)
 
     # -- decisions -----------------------------------------------------------
 
@@ -105,11 +122,46 @@ class LeafAccounting:
         due = [self._accounts[lid] for lid in self._touched
                if lid in self._accounts]
         self._touched.clear()
+        if not self.cfg.retrain:      # accounting kept for recluster only
+            return []
         return [a.leaf for a in due if self.should_retrain(a)]
 
     def forget(self, leaf: Leaf) -> None:
         """Drop a retrained leaf's account (its region restarts clean)."""
         self._accounts.pop(id(leaf), None)
+
+    def plan_reclusters(self, flattener) -> list[tuple[Leaf, int]]:
+        """Persistently-hot large segments due for a locality split, hottest
+        and largest first, as `(leaf, n_children)` pairs.
+
+        A leaf qualifies when it has received writes in
+        `recluster_hot_streak` consecutive merge epochs AND its cached
+        flatten segment spans at least `recluster_min_rows` slot rows (the
+        flattener's row count is the actual cost a dirty segment adds to a
+        merge — pairs undercount conflict-chain slots).  The per-merge
+        budget `recluster_max_per_merge` keeps any single publish bounded;
+        leftover hot leaves re-qualify next merge if the writes persist."""
+        cfg = self.cfg
+        due = self._hot_touched
+        self._hot_touched = set()
+        if not cfg.recluster or flattener is None:
+            return []
+        cand: list[tuple[int, int, Leaf]] = []
+        for lid in due:
+            acct = self._accounts.get(lid)
+            if acct is None or acct.hot_streak < cfg.recluster_hot_streak:
+                continue
+            rows = flattener.segment_rows(lid)
+            if rows is None or rows < cfg.recluster_min_rows:
+                continue
+            cand.append((acct.hot_streak, rows, acct.leaf))
+        cand.sort(key=lambda c: (c[0], c[1]), reverse=True)
+        out = []
+        for _, rows, leaf in cand[: cfg.recluster_max_per_merge]:
+            fo = int(np.clip(-(-rows // max(cfg.recluster_target_pairs, 1)),
+                             2, 256))
+            out.append((leaf, fo))
+        return out
 
 
 def fold_with_accounting(dili: DILI, ov,
@@ -123,6 +175,8 @@ def fold_with_accounting(dili: DILI, ov,
     re-locate the same leaf, doubling the host-walk cost on the merge
     path this subsystem exists to shrink.  The dirty marking the public
     entry points perform happens here instead."""
+    if accounting is not None:
+        accounting.begin_epoch()
     keys, vals, tomb = ov.entries()
     for k, v, t in zip(keys, vals, tomb):
         k = float(k)
@@ -141,6 +195,22 @@ def run_retrains(dili: DILI, accounting: LeafAccounting) -> int:
     n = 0
     for leaf in accounting.plan():
         if rebuild_subtree(dili, leaf) is not None:
+            accounting.forget(leaf)
+            n += 1
+    return n
+
+
+def run_reclusters(dili: DILI, accounting: LeafAccounting,
+                   flattener) -> int:
+    """Split every persistently-hot large leaf the accounting flagged into
+    its own fan of small splice segments (DESIGN.md section 12); returns
+    the number of splits performed.  Runs AFTER `run_retrains` in the
+    merge pipeline: a leaf both retrained and heat-flagged was already
+    replaced (and its account forgotten), so the planner skips it and the
+    fresh subtree re-qualifies from a cold streak if the heat persists."""
+    n = 0
+    for leaf, fo in accounting.plan_reclusters(flattener):
+        if split_leaf(dili, leaf, fo) is not None:
             accounting.forget(leaf)
             n += 1
     return n

@@ -48,6 +48,29 @@ class MaintenanceConfig:
                         (the pre-durability behavior).
     retry_backoff_s   : base backoff before retry k is
                         `retry_backoff_s * 2**k`, jittered to 50-150%.
+    recluster         : locality-aware segment re-clustering — split leaves
+                        that stay write-hot across consecutive merges into
+                        many small leaf segments, so a skewed write stream
+                        dirties O(hot segments) per merge instead of
+                        re-flattening nearly every row (the zipfian
+                        hashed-rank-scatter pathology, DESIGN.md section 12).
+    recluster_hot_streak : consecutive merge epochs a leaf must receive
+                        writes before it counts as persistently hot.
+    recluster_min_rows: only split leaves whose flattened segment spans at
+                        least this many slot rows — splitting already-small
+                        segments churns node ids for no dirty-row savings.
+    recluster_target_pairs : aim each child segment at roughly this many
+                        pairs; the split fanout is ceil(pairs / target),
+                        clamped to [2, 256].
+    recluster_max_per_merge : per-merge split budget, bounding splice work
+                        added to any single publish.  Sized to FINISH
+                        adoption fast: under uniform-scatter skew nearly
+                        every large segment eventually qualifies, and a
+                        small budget prolongs the phase where merges pay
+                        both high dirty fractions AND split cost — better
+                        to front-load the one-time splits into a few
+                        merges (visible as p95/p99 spikes) and reach the
+                        low-dirty steady state early.
     """
 
     incremental: bool = True
@@ -60,6 +83,11 @@ class MaintenanceConfig:
     max_queue: int = 4
     max_merge_retries: int = 2
     retry_backoff_s: float = 0.05
+    recluster: bool = True
+    recluster_hot_streak: int = 2
+    recluster_min_rows: int = 2048
+    recluster_target_pairs: int = 512
+    recluster_max_per_merge: int = 1024
 
     # -- (de)serialization for api.IndexConfig round-trips -------------------
 
@@ -71,7 +99,12 @@ class MaintenanceConfig:
                     arrival_window=self.arrival_window,
                     background=self.background, max_queue=self.max_queue,
                     max_merge_retries=self.max_merge_retries,
-                    retry_backoff_s=self.retry_backoff_s)
+                    retry_backoff_s=self.retry_backoff_s,
+                    recluster=self.recluster,
+                    recluster_hot_streak=self.recluster_hot_streak,
+                    recluster_min_rows=self.recluster_min_rows,
+                    recluster_target_pairs=self.recluster_target_pairs,
+                    recluster_max_per_merge=self.recluster_max_per_merge)
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "MaintenanceConfig":

@@ -103,7 +103,23 @@ class IncrementalFlattener:
         self.last_dirty_rows = 0
         self.last_total_rows = 0
         self.last_incremental = False
-        self.n_fallback_full = 0             # unmapped-dirty safety fallbacks
+        # forced full re-flattens from an unmappable dirty id — distinct
+        # from INTENTIONAL full flattens (cold cache, incremental=False):
+        # a nonzero count means the dirty plumbing leaked an id and the
+        # O(dirty) guarantee silently degraded to O(n).  Surfaced as
+        # `n_forced_full_flattens` in engine stats().
+        self.n_fallback_full = 0
+
+    def segment_rows(self, nid: int) -> int | None:
+        """Flattened slot-row count of the segment containing node `nid`,
+        or None if the node was never flattened.  The re-clustering
+        planner's size signal: rows (not pairs) are what a dirty segment
+        actually costs a merge."""
+        seg = self._node2seg.get(nid)
+        if seg is None:
+            return None
+        blk = self._cache.get(seg)
+        return blk.n_slots if blk is not None else None
 
     # -- structure -----------------------------------------------------------
 
@@ -179,15 +195,15 @@ class IncrementalFlattener:
             for onode in self._cache.pop(dead).nodes:
                 self._node2seg.pop(id(onode), None)
 
-        # pass 2: assign global offsets per unit
-        n_units = len(units)
-        node_off = np.zeros(n_units, np.int64)
-        slot_off = np.zeros(n_units, np.int64)
+        # pass 2: assign global offsets per unit (plain python ints — a
+        # numpy scalar store per unit costs more than the whole pass)
+        node_off: list[int] = []
+        slot_off: list[int] = []
         cur_n = cur_s = 0
         blocks: list[SegmentBlock | None] = []
-        for u, (kind, nd, _) in enumerate(units):
-            node_off[u] = cur_n
-            slot_off[u] = cur_s
+        for kind, nd, _ in units:
+            node_off.append(cur_n)
+            slot_off.append(cur_s)
             if kind == "spine":
                 blocks.append(None)
                 cur_n += 1
@@ -199,40 +215,59 @@ class IncrementalFlattener:
                 cur_s += blk.n_slots
         unit_of_node = {id(nd): u for u, (_, nd, _) in enumerate(units)}
 
-        # pass 3: assemble (vectorized shifts; no per-slot Python)
+        # pass 3: assemble.  The unit loop only APPENDS segment-local
+        # arrays (zero numpy calls per cached segment — with many small
+        # segments the per-segment numpy-call overhead used to dominate
+        # the whole splice); every id/offset shift is applied after the
+        # concat as one vectorized repeat/masked-add over the full table.
         a_parts, b_parts, base_parts, fo_parts, dense_parts = [], [], [], [], []
         tag_parts, key_parts, val_parts = [], [], []
         pk_parts, pv_parts, ps_parts = [], [], []
+        u_nodes: list[int] = []      # node rows per unit  (base shift runs)
+        u_slots: list[int] = []      # slot rows per unit  (val shift runs)
+        u_noff: list[int] = []       # node-id shift for seg CHILD slots
+        seg_pairs: list[int] = []    # pair rows per seg   (pair_slot runs)
+        seg_soff: list[int] = []     # slot-row shift per seg's pair run
+        zero1_i8 = np.zeros(1, np.int8)
+        zero1_i32 = np.zeros(1, np.int32)
         max_depth = 1
         for u, (kind, nd, d) in enumerate(units):
             if kind == "spine":
                 a_parts.append(np.array([nd.a]))
                 b_parts.append(np.array([nd.b]))
-                base_parts.append(np.array([slot_off[u]], np.int32))
+                base_parts.append(zero1_i32)
                 fo_parts.append(np.array([nd.fanout], np.int32))
-                dense_parts.append(np.zeros(1, np.int8))
+                dense_parts.append(zero1_i8)
                 m = nd.fanout
                 tag_parts.append(np.full(m, TAG_CHILD, np.int8))
                 key_parts.append(np.zeros(m))
+                # spine CHILD targets are arbitrary units' offsets — only
+                # these are resolved in-loop (few internals, many segments)
                 val_parts.append(np.array(
                     [node_off[unit_of_node[id(c)]] for c in nd.children],
                     np.int64))
+                u_nodes.append(1)
+                u_slots.append(m)
+                u_noff.append(0)     # already global
                 max_depth = max(max_depth, d)
             else:
                 blk = blocks[u]
                 a_parts.append(blk.a)
                 b_parts.append(blk.b)
-                base_parts.append((blk.base + slot_off[u]).astype(np.int32))
+                base_parts.append(blk.base)
                 fo_parts.append(blk.fo)
                 dense_parts.append(blk.dense)
                 tag_parts.append(blk.tag)
                 key_parts.append(blk.key)
-                val_parts.append(np.where(blk.child_mask,
-                                          blk.val + node_off[u], blk.val))
+                val_parts.append(blk.val)
                 pk_parts.append(blk.pair_key)
                 pv_parts.append(blk.pair_val)
-                ps_parts.append((blk.pair_slot + slot_off[u])
-                                .astype(np.int32))
+                ps_parts.append(blk.pair_slot)
+                u_nodes.append(blk.n_nodes)
+                u_slots.append(blk.n_slots)
+                u_noff.append(node_off[u])
+                seg_pairs.append(len(blk.pair_slot))
+                seg_soff.append(slot_off[u])
                 max_depth = max(max_depth, d + blk.depth - 1)
 
         total_rows = int(cur_s)
@@ -244,21 +279,38 @@ class IncrementalFlattener:
 
         z8, zf, zi = (np.zeros(0, np.int8), np.zeros(0),
                       np.zeros(0, np.int64))
+        zi32 = np.zeros(0, np.int32)
+        tag = np.concatenate(tag_parts) if tag_parts else z8
+        # base rows are segment-local: one repeat of each unit's slot
+        # offset over its node rows re-bases them globally (spine locals
+        # are 0, so the uniform shift is exact for both unit kinds)
+        base = np.concatenate(base_parts) if base_parts else zi32
+        base += np.repeat(np.asarray(slot_off, np.int32),
+                          np.asarray(u_nodes, np.int32))
+        # CHILD slot entries of a segment hold segment-local node ids;
+        # shift them by their unit's node offset in one masked add
+        # (spine units carry shift 0 — their targets are already global)
+        val = np.concatenate(val_parts) if val_parts else zi
+        child = tag == TAG_CHILD
+        val[child] += np.repeat(np.asarray(u_noff, np.int64),
+                                np.asarray(u_slots, np.int64))[child]
+        # sorted pair runs: slot ranks are segment-local too
+        pair_slot = np.concatenate(ps_parts) if ps_parts else zi32
+        pair_slot += np.repeat(np.asarray(seg_soff, np.int32),
+                               np.asarray(seg_pairs, np.int32))
         return FlatDILI(
             a=np.concatenate(a_parts) if a_parts else zf,
             b=np.concatenate(b_parts) if b_parts else zf,
-            base=(np.concatenate(base_parts) if base_parts
-                  else np.zeros(0, np.int32)),
-            fo=(np.concatenate(fo_parts) if fo_parts
-                else np.zeros(0, np.int32)),
+            base=base,
+            fo=(np.concatenate(fo_parts) if fo_parts else zi32),
             dense=np.concatenate(dense_parts) if dense_parts else z8,
-            tag=np.concatenate(tag_parts) if tag_parts else z8,
+            tag=tag,
             key=np.concatenate(key_parts) if key_parts else zf,
-            val=np.concatenate(val_parts) if val_parts else zi,
+            val=val,
             pair_key=np.concatenate(pk_parts) if pk_parts else zf,
             pair_val=np.concatenate(pv_parts) if pv_parts else zi,
-            pair_slot=(np.concatenate(ps_parts) if ps_parts
-                       else np.zeros(0, np.int32)),
+            pair_slot=pair_slot,
             root=0, max_depth=max_depth,
             key_lo=float(dili.root.lb), key_hi=float(dili.root.ub),
+            n_segments=len(self._cache),
         )

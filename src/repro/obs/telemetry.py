@@ -51,6 +51,7 @@ class Telemetry:
         self.metrics = MetricsRegistry()
         self.metrics.declare_histogram(*(f"op.{op}" for op in OPS))
         self.metrics.declare_counter("publish.retraced", "maint.errors",
+                                     "maint.reclusters",
                                      "recovery.count",
                                      "recovery.replayed_records")
         self.spans = SpanRecorder(declare=MERGE_SPANS + RECOVERY_SPANS)

@@ -13,6 +13,7 @@ the same span names:
   merge.queue_wait   — submit -> worker pickup (background scheduler only)
   merge.fold         — overlay fold through the host tree (Alg. 7/8)
   merge.retrain      — drift/tombstone-triggered subtree rebuilds
+  merge.recluster    — heat-triggered locality splits of hot leaf segments
   merge.flatten      — full or incremental-splice flatten
   merge.publish      — device upload + epoch flip
   merge.frozen_dwell — overlay freeze -> frozen drop (reads resolve the
@@ -41,8 +42,8 @@ from dataclasses import dataclass, field
 from .metrics import latency_summary
 
 MERGE_SPANS = ("merge.queue_wait", "merge.fold", "merge.retrain",
-               "merge.flatten", "merge.publish", "merge.frozen_dwell",
-               "merge.failed")
+               "merge.recluster", "merge.flatten", "merge.publish",
+               "merge.frozen_dwell", "merge.failed")
 
 RECOVERY_SPANS = ("recovery.load", "recovery.replay", "recovery.publish")
 

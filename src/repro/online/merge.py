@@ -33,7 +33,7 @@ from ..core.dili import DILI, LAMBDA, bulk_load
 from ..core.flat import flatten
 from ..maintain import (IncrementalFlattener, LeafAccounting,
                         MaintenanceConfig, MaintenanceScheduler,
-                        fold_with_accounting, run_retrains)
+                        fold_with_accounting, run_reclusters, run_retrains)
 from ..obs import NULL_TELEMETRY
 from .epoch import EpochStats, SnapshotStore
 from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
@@ -118,8 +118,13 @@ class OnlineIndex:
         m = maintenance
         self.flattener = (IncrementalFlattener()
                           if m is not None and m.incremental else None)
+        # accounting carries BOTH the retrain plan and the write-heat
+        # re-clustering plan; reclustering additionally needs the
+        # incremental flattener (its segment row counts are the size
+        # signal), so with incremental=False it plans nothing
         self.accounting = (LeafAccounting(m)
-                           if m is not None and m.retrain else None)
+                           if m is not None and (m.retrain or m.recluster)
+                           else None)
         self.scheduler = (MaintenanceScheduler(m.max_queue)
                           if m is not None and m.background else None)
         self.on_publish = None         # post-publish hook (durability
@@ -143,6 +148,7 @@ class OnlineIndex:
         self.n_incremental_flattens = 0
         self.n_merges = 0
         self.n_retrains = 0
+        self.n_reclusters = 0
         self.last_dirty_frac = 1.0
         self.merge_reasons: Counter = Counter()
         self._publish()
@@ -327,6 +333,13 @@ class OnlineIndex:
                 fold_with_accounting(self.dili, frozen, self.accounting)
             with self.tel.span("merge.retrain"):
                 retrains = run_retrains(self.dili, self.accounting)
+            with self.tel.span("merge.recluster"):
+                reclusters = run_reclusters(self.dili, self.accounting,
+                                            self.flattener)
+            if reclusters:
+                self.n_reclusters += reclusters
+                if self.tel.enabled:
+                    self.tel.metrics.count("maint.reclusters", reclusters)
         else:
             with self.tel.span("merge.fold", reason=reason,
                                pending=frozen.count):

@@ -238,6 +238,40 @@ def test_pallas_engine_large_magnitude_keys_exact():
     assert not f2.any()
 
 
+def test_pallas_engine_rejects_integer_writes_beyond_f32_domain():
+    """Satellite regression: at |key| >= 2**24 the f32 spacing exceeds 1,
+    so adjacent int64 keys alias to one f32 value — a write there would
+    silently land on a DIFFERENT logical key.  The engine must refuse it
+    (naming the precision domain), not quantize it; in-domain integers and
+    fractional keys (the documented quantize tolerance) still pass."""
+    U = np.arange(0, 4000, 2, dtype=np.float64)
+    ix = LearnedIndex.build(U, config=IndexConfig(
+        engine="pallas", merge=manual_merge_policy()))
+    bad = np.array([2.0 ** 25 + 1])            # f32 spacing here is 4
+    with pytest.raises(ValueError, match="16777216"):
+        ix.upsert(bad, np.array([7]))
+    with pytest.raises(ValueError, match="f32"):
+        ix.delete(bad)
+    ix.upsert(np.array([3.0, 2.0 ** 24 - 2.0]), np.array([1, 2]))
+    ix.upsert(np.array([5.25]), np.array([3]))     # fractional: tolerated
+    assert ix.get(2.0 ** 24 - 2.0) == 2
+    assert ix.get(5.25) == 3
+    ix.close()
+
+
+def test_pallas_engine_warns_on_build_key_collisions():
+    """Satellite regression: building the pallas engine over keys that
+    collide after f32 quantization is tolerated (last-write-wins) but
+    must WARN, stating the f32 integer-precision domain (2**24)."""
+    keys = 2.0 ** 25 + np.arange(64, dtype=np.float64)   # collapse 4:1
+    with pytest.warns(UserWarning, match="16777216"):
+        ix = LearnedIndex.build(keys, config=IndexConfig(
+            engine="pallas", merge=manual_merge_policy()))
+    v, f = ix.lookup(np.array([2.0 ** 25]))
+    assert f.all()
+    ix.close()
+
+
 @pytest.mark.slow
 def test_sharded_engine_multi_device_equivalence():
     """The facade on an 8-shard mesh answers exactly like the local engine

@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro.api import IndexConfig, LearnedIndex, MaintenanceConfig
-from repro.core.dili import Internal, bulk_load, rebuild_subtree
+from repro.core.dili import (Internal, bulk_load, collect_pairs,
+                             rebuild_subtree, split_leaf)
 from repro.core.flat import flatten
 from repro.maintain import (IncrementalFlattener, LeafAccounting,
                             MaintenanceScheduler, ks_uniform, leaf_drift)
@@ -119,7 +120,8 @@ def test_splice_flatten_property():
                      .integers(0, 1 << 20, 1500)).astype(np.float64)
 
     @settings(max_examples=25, deadline=None)
-    @given(st.lists(st.tuples(st.sampled_from(["upsert", "delete", "fold"]),
+    @given(st.lists(st.tuples(st.sampled_from(["upsert", "delete", "fold",
+                                               "split"]),
                               st.integers(0, 1 << 20)),
                     min_size=1, max_size=60),
            st.integers(0, 2 ** 31 - 1))
@@ -132,6 +134,20 @@ def test_splice_flatten_property():
                 d.upsert(float(k), i)
             elif op == "delete":
                 d.delete(float(k))
+            elif op == "split":
+                # the re-clustering mutation, at arbitrary points in the
+                # op stream; alternate dirty-marking because both paths
+                # must splice exactly (production marks via the fold, but
+                # identity-miss alone has to carry it too)
+                tops = (d.root.children if isinstance(d.root, Internal)
+                        else [d.root])
+                cands = [c for c in tops
+                         if not isinstance(c, Internal) and c.omega >= 4]
+                if cands:
+                    leaf = cands[k % len(cands)]
+                    if split_leaf(d, leaf, 2 + k % 7) is not None \
+                            and k % 2:
+                        d.dirty_ids.add(id(leaf))
             else:
                 assert_flat_identical(fl.flatten(d, d.take_dirty()),
                                       flatten(d), f"fold@{i}")
@@ -203,6 +219,191 @@ def test_leaf_drift_uniform_arrivals_low():
     from repro.core.dili import collect_pairs
     ks = [p[0] for p in collect_pairs(leaf)]
     assert leaf_drift(leaf, ks) < 0.3       # own keys: no drift
+
+
+# ---------------------------------------------------------------------------
+# locality re-clustering (the zipfian splice-locality pathology)
+# ---------------------------------------------------------------------------
+
+
+def _top_leaves(d):
+    tops = (d.root.children if isinstance(d.root, Internal) else [d.root])
+    return [c for c in tops if not isinstance(c, Internal)]
+
+
+def test_split_leaf_bit_identity_and_refusals():
+    """`split_leaf` is splice-compatible: one parent pointer swap, the
+    splice stays bit-identical to a full flatten, the segment count grows
+    by the fanout, and every key keeps resolving.  Degenerate inputs are
+    refused (None) without touching the tree."""
+    rng = np.random.default_rng(11)
+    keys = _irregular_keys(rng, 8000)
+    d = bulk_load(keys, sample_stride=2)
+    fl = IncrementalFlattener()
+    f0 = fl.flatten(d, d.take_dirty())
+    cands = [c for c in _top_leaves(d) if c.omega >= 32]
+    assert cands, "irregular build must leave a splittable top-level leaf"
+    leaf = max(cands, key=lambda c: c.omega)
+    before = {float(p[0]): p[1] for p in collect_pairs(leaf)}
+    assert split_leaf(d, leaf, 1) is None          # fanout < 2
+    node = split_leaf(d, leaf, 8)
+    assert node is not None and len(node.children) == 8
+    assert split_leaf(d, leaf, 8) is None          # already replaced
+    d.dirty_ids.add(id(leaf))                      # what the fold would do
+    f1 = fl.flatten(d, d.take_dirty())
+    assert fl.n_fallback_full == 0 and fl.last_incremental
+    assert_flat_identical(f1, flatten(d), "post-split")
+    assert f1.n_segments >= f0.n_segments + 7      # one seg -> 8 children
+    for k, v in before.items():
+        assert d.search(k) == v
+
+
+def test_recluster_pipeline_splits_hot_segment_and_cuts_dirty_rows():
+    """End-to-end through `OnlineIndex`: the same few keys written across
+    consecutive merges mark one big leaf persistently hot; the merge
+    pipeline splits it (n_reclusters >= 1) and later merges re-flatten a
+    small child instead of the whole segment, while the published
+    snapshot stays bit-identical to a full flatten and reads stay exact."""
+    rng = np.random.default_rng(12)
+    keys = _irregular_keys(rng, 16000)
+    cfg = MaintenanceConfig(retrain=False, recluster_hot_streak=2,
+                            recluster_min_rows=64, recluster_target_pairs=8,
+                            recluster_max_per_merge=64)
+    oi = OnlineIndex(keys, sample_stride=2, overlay_cap=1 << 14,
+                     policy=MergePolicy(max_writes=1 << 40,
+                                        pressure_check_every=1 << 40),
+                     maintenance=cfg)
+    leaf = max(_top_leaves(oi.dili), key=lambda c: c.omega)
+    # rows (slot count, >= fanout) drive the planner, not omega; the
+    # biggest leaf here flattens to well over recluster_min_rows slots
+    assert leaf.omega >= 32, "need one big segment to make the point"
+    lk = np.array([p[0] for p in collect_pairs(leaf)], np.float64)
+    hot = lk[:: max(1, len(lk) // 4)][:4]          # few keys, one segment
+    rows = []
+    for r in range(4):
+        oi.upsert_batch(hot, np.full(len(hot), 1000 + r, np.int64))
+        oi.flush()
+        rows.append(oi.flattener.last_dirty_rows)
+    # merge 1 seeds the cache (full flatten); merge 2 crosses the streak
+    # threshold and splits; merges 3+ dirty only the hot children
+    assert oi.n_reclusters >= 1
+    assert rows[-1] < rows[1], rows
+    assert oi.flattener.n_fallback_full == 0
+    assert_flat_identical(oi.store.flat, flatten(oi.dili), "recluster")
+    v, f = oi.lookup(hot)
+    assert np.asarray(f).all()
+    np.testing.assert_array_equal(np.asarray(v), np.full(len(hot), 1003))
+    v, f = oi.lookup(lk[:128])
+    assert np.asarray(f).all()
+
+
+def test_recluster_respects_budget_and_min_rows():
+    """Planner contract: segments below `recluster_min_rows` never
+    qualify, and one merge never splits more than
+    `recluster_max_per_merge` leaves."""
+    rng = np.random.default_rng(13)
+    keys = _irregular_keys(rng, 16000)
+    cfg = MaintenanceConfig(retrain=False, recluster_hot_streak=1,
+                            recluster_min_rows=1 << 30,
+                            recluster_target_pairs=8)
+    oi = OnlineIndex(keys, sample_stride=2, overlay_cap=1 << 14,
+                     policy=MergePolicy(max_writes=1 << 40,
+                                        pressure_check_every=1 << 40),
+                     maintenance=cfg)
+    for r in range(3):
+        oi.upsert_batch(keys[::97], np.full(len(keys[::97]), r, np.int64))
+        oi.flush()
+    assert oi.n_reclusters == 0                    # nothing is big enough
+    cfg2 = MaintenanceConfig(retrain=False, recluster_hot_streak=1,
+                             recluster_min_rows=16,
+                             recluster_target_pairs=4,
+                             recluster_max_per_merge=2)
+    oi2 = OnlineIndex(keys, sample_stride=2, overlay_cap=1 << 14,
+                      policy=MergePolicy(max_writes=1 << 40,
+                                         pressure_check_every=1 << 40),
+                      maintenance=cfg2)
+    seen = 0
+    for r in range(2):      # the build publish already seeded row counts
+        oi2.upsert_batch(keys[::97], np.full(len(keys[::97]), r, np.int64))
+        oi2.flush()
+        delta = oi2.n_reclusters - seen
+        seen = oi2.n_reclusters
+        assert delta <= 2, delta                   # per-merge budget
+    assert seen >= 1
+    assert_flat_identical(oi2.store.flat, flatten(oi2.dili), "budget")
+
+
+def test_unmappable_dirty_id_counts_forced_full_flatten():
+    """Satellite regression: an id the flattener cannot map to a segment
+    (leaked plumbing) falls back to a FULL re-flatten, and that event is
+    counted distinctly — `n_forced_full_flattens` in stats(), separate
+    from intentional full flattens — so the O(dirty) guarantee silently
+    degrading is observable."""
+    U = np.arange(0, 8000, 2, dtype=np.float64)
+    ix = LearnedIndex.build(U, config=IndexConfig(
+        engine="local", overlay_cap=1 << 14,
+        merge=MergePolicy(max_writes=1 << 40, pressure_check_every=1 << 40),
+        maintenance=MaintenanceConfig()))
+    oi = ix._engine.oi
+    ix.upsert(np.arange(1, 101, 2, dtype=np.float64),
+              np.arange(50, dtype=np.int64))
+    ix.flush()                                     # seeds the segment cache
+    assert ix.stats()["n_forced_full_flattens"] == 0
+    ix.upsert(np.arange(101, 201, 2, dtype=np.float64),
+              np.arange(50, dtype=np.int64))
+    oi.dili.dirty_ids.add(12345)                   # stale / leaked id
+    ix.flush()
+    s = ix.stats()
+    assert s["n_forced_full_flattens"] == 1
+    assert oi.flattener.n_fallback_full == 1
+    # the degraded merge still published exactly, and the next clean
+    # merge goes back to splicing without growing the forced-full count
+    v, f = ix.lookup(np.arange(101, 201, 2, dtype=np.float64))
+    assert f.all()
+    ix.upsert(np.arange(201, 301, 2, dtype=np.float64),
+              np.arange(50, dtype=np.int64))
+    ix.flush()
+    s = ix.stats()
+    assert s["n_forced_full_flattens"] == 1
+    assert s["n_incremental_flattens"] >= 1
+    ix.close()
+
+
+@pytest.mark.slow
+def test_zipfian_recluster_bounds_dirty_fraction_at_1m():
+    """The PR's acceptance pathology in miniature: 1M int64-valued keys,
+    scrambled-zipfian updates (YCSB draw: zipfian ranks through the Knuth
+    hash scatter, theta=0.99) folded across 12 merges.  Hashed skew
+    spreads the hot set over every segment, so without re-clustering
+    nearly every row re-flattens per merge (dirty fraction ~1); with it
+    the mean must stay <= 0.25 and splits must actually happen."""
+    from repro.workloads.distributions import (DEFAULT_THETA, ZetaCache,
+                                               scatter_ranks, zipfian_ranks)
+    n = 1_000_000
+    keys = np.arange(0, 2 * n, 2, dtype=np.float64)
+    cfg = MaintenanceConfig(recluster_hot_streak=1, recluster_min_rows=512,
+                            recluster_target_pairs=128,
+                            recluster_max_per_merge=4096)
+    oi = OnlineIndex(keys, sample_stride=4, overlay_cap=1 << 15,
+                     policy=MergePolicy(max_writes=1 << 40,
+                                        pressure_check_every=1 << 40),
+                     maintenance=cfg)
+    rng = np.random.default_rng(23)
+    zeta = ZetaCache(DEFAULT_THETA)
+    fracs = []
+    for _ in range(12):
+        idx = scatter_ranks(
+            zipfian_ranks(rng, n, 2048, DEFAULT_THETA, zeta), n)
+        oi.upsert_batch(keys[idx], idx.astype(np.int64))
+        oi.flush()
+        fl = oi.flattener
+        fracs.append(fl.last_dirty_rows / max(fl.last_total_rows, 1))
+    assert oi.n_reclusters > 0
+    assert float(np.mean(fracs)) <= 0.25, fracs
+    assert fl.n_fallback_full == 0
+    probe = keys[rng.integers(0, n, 4096)]
+    _, f = oi.lookup(probe)
+    assert np.asarray(f).all()
 
 
 # ---------------------------------------------------------------------------
