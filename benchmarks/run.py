@@ -58,6 +58,17 @@ ENGINE = "local"
 METRICS_JSON = ""
 METRICS_SECTIONS: dict = {}
 
+# --trace-json: when set, the first --serve latency leg runs with causal
+# tracing armed and dumps the Chrome-trace-event JSON here (Perfetto-viewable)
+TRACE_JSON = ""
+
+
+def _metrics_section(m: dict, n_keys: int) -> dict:
+    """Stamp a `LearnedIndex.metrics()` snapshot with the section's key
+    scale, mirroring the n_keys stamp every BENCH_PR2.json section
+    carries (the snapshot already self-describes via its `schema` key)."""
+    return {"n_keys": n_keys, **m}
+
 
 def _dili_lookup_time(name: str, **kw) -> tuple[float, dict]:
     keys, d, f, idx = dili_for(name, **kw)
@@ -564,7 +575,7 @@ def workload_bench(preset: str, maint_mode: str) -> dict:
                     f"dirty={d['dirty_row_fraction_mean']:.3f}")
         sections[tag] = d
         if METRICS_JSON:
-            METRICS_SECTIONS[tag] = m
+            METRICS_SECTIONS[tag] = _metrics_section(m, len(keys))
     return sections
 
 
@@ -820,7 +831,7 @@ def serve_bench(preset: str) -> dict:
           f"({N_SERVE_CLIENTS} open-loop client streams, "
           f"{N_SERVE_REQ_OPS}-op requests)")
     ix = _serve_index(keys, background=bg_main,
-                      telemetry=bool(METRICS_JSON))
+                      telemetry=bool(METRICS_JSON) or bool(TRACE_JSON))
     _warm_serve_buckets(ix, keys, scfg)
     tap = _StreamTap(spec, keys)
     fe = ServeFrontend(ix, scfg, journal=False)
@@ -836,10 +847,18 @@ def serve_bench(preset: str) -> dict:
     csv_row(f"{tag},{ENGINE},saturation_ops_per_s", sat,
             f"ramp_legs={len(ramp)};clients={N_SERVE_CLIENTS}")
     sec["latency_at"] = {}
-    for frac in (0.5, 0.8, 0.95):
+    for li, frac in enumerate((0.5, 0.8, 0.95)):
         rate = frac * sat
+        # --trace-json: arm causal tracing on the FIRST latency leg only
+        # (the 50% one — comfortably under saturation, so the exported
+        # queue/exec/facade/WAL/merge chains show steady-state serving,
+        # not overload shedding)
+        trace = TRACE_JSON if (TRACE_JSON and li == 0) else None
         rep = open_loop(fe, tap.take(_serve_leg_ops(rate)), rate,
-                        n_clients=N_SERVE_CLIENTS)
+                        n_clients=N_SERVE_CLIENTS, trace_path=trace)
+        if trace:
+            print(f"# serve: wrote causal trace {trace} "
+                  f"(open in Perfetto / chrome://tracing)")
         d = rep.to_json_dict()
         sec["latency_at"][f"{int(frac * 100)}%"] = d
         lk = d["latency_ms"].get("lookup", {})
@@ -852,7 +871,7 @@ def serve_bench(preset: str) -> dict:
     sec["batcher"] = fe.stats()
     fe.close()
     if METRICS_JSON:
-        METRICS_SECTIONS[tag] = ix.metrics()
+        METRICS_SECTIONS[tag] = _metrics_section(ix.metrics(), len(keys))
     ix.close()
 
     # -- oracle equivalence: journaled 50%-rate run, replayed ----------------
@@ -1144,6 +1163,12 @@ def main() -> None:
                          "BENCH_RECOVERY_RECORDS-record WAL tail, and an "
                          "oracle-checked kill-and-recover replay; three "
                          "durability,* sections in BENCH_PR2.json")
+    ap.add_argument("--trace-json", default="",
+                    help="arm end-to-end causal tracing on the first "
+                         "--serve latency leg and write the Chrome-trace-"
+                         "event JSON here; open it in Perfetto to see each "
+                         "request's queue_wait -> exec -> facade -> WAL "
+                         "chain with linked merge spans")
     ap.add_argument("--metrics-json", default="",
                     help="build --workload indexes with telemetry enabled "
                          "and write their LearnedIndex.metrics() snapshots "
@@ -1164,9 +1189,10 @@ def main() -> None:
                          "back-to-back (the zipfian splice-locality "
                          "ablation)")
     args = ap.parse_args()
-    global ENGINE, METRICS_JSON
+    global ENGINE, METRICS_JSON, TRACE_JSON
     ENGINE = args.engine
     METRICS_JSON = args.metrics_json
+    TRACE_JSON = args.trace_json
     if args.only or not (args.pr2_json or args.pr2_extend or args.workload
                          or args.durability or args.serve or args.scale):
         for fn in ALL:

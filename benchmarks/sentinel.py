@@ -1,0 +1,258 @@
+"""Perf-regression sentinel: diff a fresh BENCH_PR2.json emission against
+the checked-in artifact with per-section tolerance bands.
+
+The artifact is the repo's hot-path trajectory (benchmarks/run.py
+--pr2-json); this tool makes it a *tripwire*: CI re-emits the artifact at
+the standard 300k-key scale and the sentinel flags any timing that moved
+outside its band.  Metrics are classified by leaf-key pattern:
+
+  median   p50 / mean / ns_per_query / us_per_op / wall seconds —
+           stable statistics, tight band (default 1.6x);
+  tail     p95 / p99 / p999 / max — noisy on shared CI runners, loose
+           band (default 3.0x);
+  thrpt    *ops_per_s — higher is better, judged with the ratio
+           inverted (band shared with median).
+
+Everything else (counts, n_*, booleans, strings, lists, config echoes
+like offered_ops_per_s) is structural, not a timing, and is skipped.
+Only sections present in BOTH files are compared, and a section whose
+`n_keys` stamp differs between the two is skipped wholesale — an
+@n=10000000 section has no business being judged against a 300k run.
+
+Usage:
+
+    python benchmarks/sentinel.py --baseline BENCH_PR2.json \
+        --fresh /tmp/BENCH_PR2.fresh.json
+
+    python benchmarks/sentinel.py --baseline BENCH_PR2.json --self-test
+
+Exit status 0 = clean (every compared metric in band), 1 = regression(s)
+flagged, 2 = usage/schema error.  `--self-test` proves the tripwire
+works: the artifact must pass against itself, and an injected 2x median
+regression must be caught.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+from dataclasses import dataclass
+
+#: leaf-key substrings per class — checked in order, first match wins, so
+#: p999/p99/p95 must precede the generic "max"
+TAIL_PATTERNS = ("p999", "p99", "p95", "max")
+MEDIAN_PATTERNS = ("p50", "mean", "ns_per_query", "us_per_query",
+                   "us_per_op", "us_per_call", "overhead_frac",
+                   "dirty_row_fraction", "wall_s", "build_s", "flatten_s",
+                   "recover_s", "replay_s")
+THROUGHPUT_PATTERNS = ("ops_per_s",)
+#: keys that LOOK like timings but aren't: offered load is a config echo,
+#: pre_pr values are constants replayed from the pre-PR-2 capture, and
+#: max_depth is tree structure (its perf effect shows in ns_per_query)
+SKIP_PATTERNS = ("offered", "pre_pr", "depth")
+
+#: baselines at/below this are degenerate (ops that never ran) — skipped
+EPS = 1e-12
+
+
+@dataclass
+class Delta:
+    path: str           # dotted section.path of the metric
+    kind: str           # median | tail | thrpt
+    baseline: float
+    fresh: float
+    ratio: float        # regression factor, >1 means worse (direction-
+    #                     normalized: thrpt ratios are inverted)
+    band: float
+
+    @property
+    def ok(self) -> bool:
+        return self.ratio <= self.band
+
+
+def classify(leaf_key: str) -> str | None:
+    """Metric class for a leaf key, or None when it is not a timing."""
+    for pat in SKIP_PATTERNS:
+        if pat in leaf_key:
+            return None
+    for pat in TAIL_PATTERNS:
+        if pat in leaf_key:
+            return "tail"
+    for pat in MEDIAN_PATTERNS:
+        if pat in leaf_key:
+            return "median"
+    for pat in THROUGHPUT_PATTERNS:
+        if pat in leaf_key:
+            return "thrpt"
+    return None
+
+
+def _walk(doc, path=""):
+    """Yield (dotted_path, leaf_key, numeric_value) over nested dicts.
+    Lists, strings, bools and None are structural — not yielded."""
+    if not isinstance(doc, dict):
+        return
+    for k, v in doc.items():
+        p = f"{path}.{k}" if path else k
+        if isinstance(v, dict):
+            yield from _walk(v, p)
+        elif isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        else:
+            yield p, k, float(v)
+
+
+def compare(baseline: dict, fresh: dict, *, median_band: float = 1.6,
+            tail_band: float = 3.0) -> tuple[list[Delta], list[str]]:
+    """Diff two BENCH_PR2.json documents.  Returns (deltas, notes) where
+    deltas covers every compared metric (in-band and out) and notes
+    records sections skipped and why."""
+    bands = dict(median=median_band, thrpt=median_band, tail=tail_band)
+    b_secs = baseline.get("sections", {})
+    f_secs = fresh.get("sections", {})
+    deltas: list[Delta] = []
+    notes: list[str] = []
+    for tag in b_secs:
+        if tag not in f_secs:
+            notes.append(f"skip section {tag!r}: absent from fresh run")
+            continue
+        bs, fs = b_secs[tag], f_secs[tag]
+        bn = bs.get("n_keys", baseline.get("n_keys"))
+        fn = fs.get("n_keys", fresh.get("n_keys"))
+        if bn is not None and fn is not None and bn != fn:
+            notes.append(f"skip section {tag!r}: scale mismatch "
+                         f"(baseline n_keys={bn}, fresh n_keys={fn})")
+            continue
+        flat = {p: v for p, _leaf, v in _walk(fs, tag)}
+        for path, leaf, bval in _walk(bs, tag):
+            kind = classify(leaf)
+            if kind is None or path not in flat:
+                continue
+            fval = flat[path]
+            if bval <= EPS or fval <= EPS:
+                continue    # degenerate: op never ran on one side
+            ratio = (bval / fval) if kind == "thrpt" else (fval / bval)
+            deltas.append(Delta(path, kind, bval, fval, ratio,
+                                bands[kind]))
+    return deltas, notes
+
+
+def render(deltas: list[Delta], notes: list[str], *,
+           show_ok: int = 10) -> str:
+    """Readable delta table: every out-of-band metric, then the worst
+    `show_ok` in-band movers for context."""
+    bad = sorted((d for d in deltas if not d.ok), key=lambda d: -d.ratio)
+    ok = sorted((d for d in deltas if d.ok), key=lambda d: -d.ratio)
+    lines = []
+    w = max([len(d.path) for d in deltas] or [20])
+    hdr = (f"{'metric':<{w}}  {'class':<6} {'baseline':>12} "
+           f"{'fresh':>12} {'ratio':>7} {'band':>5}  status")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+
+    def row(d: Delta, status: str) -> str:
+        return (f"{d.path:<{w}}  {d.kind:<6} {d.baseline:>12.4g} "
+                f"{d.fresh:>12.4g} {d.ratio:>6.2f}x {d.band:>4.1f}x"
+                f"  {status}")
+
+    for d in bad:
+        lines.append(row(d, "REGRESSION"))
+    for d in ok[:show_ok]:
+        lines.append(row(d, "ok"))
+    if len(ok) > show_ok:
+        lines.append(f"... and {len(ok) - show_ok} more in-band metrics")
+    lines.append("")
+    lines.append(f"compared {len(deltas)} metrics: "
+                 f"{len(bad)} out of band, {len(ok)} in band")
+    for n in notes:
+        lines.append(f"note: {n}")
+    return "\n".join(lines)
+
+
+def self_test(baseline: dict, *, median_band: float,
+              tail_band: float) -> int:
+    """Prove the tripwire: the artifact passes against itself, and an
+    injected 2x regression on a median-class metric is caught."""
+    kw = dict(median_band=median_band, tail_band=tail_band)
+    deltas, _ = compare(baseline, baseline, **kw)
+    if not deltas:
+        print("self-test FAIL: no comparable metrics found in artifact")
+        return 1
+    bad = [d for d in deltas if not d.ok]
+    if bad:
+        print("self-test FAIL: artifact flagged against itself:")
+        for d in bad:
+            print(f"  {d.path}: ratio {d.ratio:.2f}x")
+        return 1
+    # inject: double the first median-class metric found in the fresh copy
+    mutated = copy.deepcopy(baseline)
+    target = next(d for d in deltas if d.kind == "median")
+    parts = target.path.split(".")
+    node = mutated["sections"]
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] *= 2.0
+    deltas, _ = compare(baseline, mutated, **kw)
+    caught = [d for d in deltas if not d.ok and d.path == target.path]
+    if not caught:
+        print(f"self-test FAIL: injected 2x regression on "
+              f"{target.path!r} was NOT flagged (band {median_band}x)")
+        return 1
+    print(f"self-test PASS: {len(deltas)} metrics compared clean "
+          f"against self; injected 2x regression on {target.path!r} "
+          f"caught at ratio {caught[0].ratio:.2f}x")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in BENCH_PR2.json")
+    ap.add_argument("--fresh", default="",
+                    help="freshly emitted BENCH_PR2.json to judge")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the sentinel catches an injected 2x "
+                         "median regression and passes the artifact "
+                         "against itself")
+    ap.add_argument("--median-band", type=float, default=1.6,
+                    help="max regression factor for medians/means and "
+                         "throughputs (default 1.6)")
+    ap.add_argument("--tail-band", type=float, default=3.0,
+                    help="max regression factor for p95/p99/p999/max "
+                         "(default 3.0)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"sentinel: cannot read baseline: {e}", file=sys.stderr)
+        return 2
+    if args.self_test:
+        return self_test(baseline, median_band=args.median_band,
+                         tail_band=args.tail_band)
+    if not args.fresh:
+        print("sentinel: --fresh PATH required (or --self-test)",
+              file=sys.stderr)
+        return 2
+    try:
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"sentinel: cannot read fresh emission: {e}",
+              file=sys.stderr)
+        return 2
+    deltas, notes = compare(baseline, fresh,
+                            median_band=args.median_band,
+                            tail_band=args.tail_band)
+    print(render(deltas, notes))
+    if not deltas:
+        print("sentinel: nothing comparable — schema drift?",
+              file=sys.stderr)
+        return 2
+    return 1 if any(not d.ok for d in deltas) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

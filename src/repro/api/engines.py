@@ -25,7 +25,6 @@ then the (small, sorted) overlay window is merged host-side per query.
 from __future__ import annotations
 
 import time
-import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -247,6 +246,39 @@ class EngineTelemetryBase:
         engine; DESIGN.md section 13)."""
         return dict(engine=self.name, **self.telemetry.snapshot())
 
+    # -- index-health introspection (obs.inspect) -----------------------------
+
+    def _inspect_flats(self) -> list:
+        """Published FlatDILI snapshot(s), one per shard."""
+        raise NotImplementedError
+
+    def _inspect_flatteners(self) -> list:
+        """Live IncrementalFlattener instances ([] = maintenance off)."""
+        return []
+
+    def _inspect_accounts(self) -> list:
+        """Live LeafAccounting instances ([] = accounting off)."""
+        return []
+
+    def inspect(self) -> dict:
+        """The engine-independent `dili.inspect/1` health document; the
+        facade layers the WAL footprint on top."""
+        from ..obs.inspect import build_inspect
+        accounts = []
+        for acct in self._inspect_accounts():
+            accounts.extend(acct.accounts())
+        ov = _overlay_summary(self._stats_overlays())
+        return build_inspect(
+            engine=self.name, epoch=self.epoch,
+            flats=self._inspect_flats(),
+            flatteners=self._inspect_flatteners(),
+            accounts=accounts,
+            overlay=dict(pending=ov["pending_writes"],
+                         live=ov["overlay_live"],
+                         tombstones=ov["overlay_tombstones"],
+                         cap=ov["overlay_cap"],
+                         fill=ov["overlay_fill"]))
+
 
 def _reject_background(cfg: IndexConfig, engine: str) -> None:
     if cfg.maintenance is not None and cfg.maintenance.background:
@@ -417,6 +449,17 @@ class LocalEngine(EngineTelemetryBase):
     def _maint_degraded(self) -> bool:
         return self.oi.maint_degraded
 
+    def _inspect_flats(self) -> list:
+        return [self.oi.store.flat]
+
+    def _inspect_flatteners(self) -> list:
+        fl = self.oi.flattener
+        return [] if fl is None else [fl]
+
+    def _inspect_accounts(self) -> list:
+        acct = self.oi.accounting
+        return [] if acct is None else [acct]
+
     # -- introspection ------------------------------------------------------
 
     def items(self):
@@ -553,30 +596,34 @@ class PallasEngine(EngineTelemetryBase):
                 ">=2^31 vals")
         return vals
 
-    @classmethod
-    def _quantize(cls, keys, vals) -> tuple[np.ndarray, np.ndarray]:
+    def _quantize(self, keys, vals) -> tuple[np.ndarray, np.ndarray]:
         """Cast keys to f32; collapse post-cast duplicates last-write-wins.
 
         Build-time collisions are tolerated but no longer silent: in
         magnitude-dense regions (integer keys with |key| >= 2**24, where
         f32 spacing exceeds 1) distinct input keys alias to one f32 value
         and their payloads collapse — a lossy build the caller must be
-        able to see coming before queries return "wrong" neighbors."""
+        able to see coming before queries return "wrong" neighbors.
+        Routed through the registry's rate-limited structured warning:
+        the `warn.pallas_f32_collision` counter accumulates the collapsed
+        count across builds while the Python warning fires once, so a
+        flood of lossy rebuilds stays visible but bounded."""
         k32 = np.asarray(keys, np.float64).astype(np.float32)
         order = np.argsort(k32, kind="stable")
-        k32, vals = k32[order], cls._check_vals_i32(vals)[order]
+        k32, vals = k32[order], self._check_vals_i32(vals)[order]
         keep = np.ones(len(k32), bool)
         keep[:-1] = k32[:-1] != k32[1:]          # keep the LAST duplicate
         n_collapsed = int((~keep).sum())
         if n_collapsed:
-            warnings.warn(
+            self.telemetry.metrics.warn(
+                "pallas_f32_collision",
                 f"pallas engine: {n_collapsed} of {len(k32)} build keys "
                 f"collide after f32 quantization and were collapsed "
                 f"last-write-wins. The kernel's f32 key domain represents "
                 f"integers exactly only for |key| < 2**24 (16777216); "
                 f"beyond that, adjacent keys closer than one f32 ulp alias "
                 f"to the same value. Use the local or sharded engine for "
-                f"full f64 key precision.", UserWarning, stacklevel=3)
+                f"full f64 key precision.", count=n_collapsed)
         return k32[keep].astype(np.float64), vals[keep]
 
     @property
@@ -600,6 +647,13 @@ class PallasEngine(EngineTelemetryBase):
                 self.dili.take_dirty()  # drain (unbounded growth otherwise)
                 incremental = False
                 self.last_dirty_frac = 1.0
+        fl = self.flattener
+        self.telemetry.sample_publish(
+            n_segments=self.flat.n_segments,
+            dirty_rows=(fl.last_dirty_rows if fl is not None
+                        else self.flat.n_slots),
+            total_rows=(fl.last_total_rows if fl is not None
+                        else self.flat.n_slots))
         merge_s += time.perf_counter() - t0
         t0 = time.perf_counter()
         with self.telemetry.span("merge.publish"):
@@ -762,6 +816,15 @@ class PallasEngine(EngineTelemetryBase):
 
     def _stats_overlays(self):
         return [self.overlay]
+
+    def _inspect_flats(self) -> list:
+        return [self.flat]
+
+    def _inspect_flatteners(self) -> list:
+        return [] if self.flattener is None else [self.flattener]
+
+    def _inspect_accounts(self) -> list:
+        return [] if self.accounting is None else [self.accounting]
 
     def _stats_extra(self) -> dict:
         return dict(max_depth=self.flat.max_depth,
@@ -965,6 +1028,17 @@ class ShardedEngine(EngineTelemetryBase):
                 # honest labeling: a flush is incremental only if every
                 # merged shard actually spliced (cold caches full-flatten)
                 incremental = all(f.last_incremental for f in fls)
+            total_slots = sum(f.n_slots for f in self.sd.flats)
+            self.telemetry.sample_publish(
+                n_segments=sum(f.n_segments for f in self.sd.flats),
+                dirty_rows=(sum(f.last_dirty_rows
+                                for f in self._flatteners)
+                            if self._flatteners is not None
+                            else total_slots),
+                total_rows=(sum(f.last_total_rows
+                                for f in self._flatteners)
+                            if self._flatteners is not None
+                            else total_slots))
             merge_s = time.perf_counter() - t0
             self.n_merges += 1
             self.n_flattens += len(merged)
@@ -1022,6 +1096,15 @@ class ShardedEngine(EngineTelemetryBase):
 
     def _stats_overlays(self):
         return self.sd.overlays
+
+    def _inspect_flats(self) -> list:
+        return list(self.sd.flats)
+
+    def _inspect_flatteners(self) -> list:
+        return list(self._flatteners or ())
+
+    def _inspect_accounts(self) -> list:
+        return list(self._accounting or ())
 
     def _stats_extra(self) -> dict:
         return dict(max_depth=self.sd.max_depth,

@@ -150,7 +150,11 @@ class LearnedIndex:
         if tel.enabled:
             t0 = time.perf_counter()
             v, f = self._engine.lookup(q)
-            tel.record_op("lookup", time.perf_counter() - t0, n)
+            dur = time.perf_counter() - t0
+            tel.record_op("lookup", dur, n)
+            if tel.trace.enabled:
+                tel.trace.add("op.lookup", t0=t0, dur_s=dur,
+                              track="facade", n_ops=n)
         else:
             tel.count_ops(n)
             v, f = self._engine.lookup(q)
@@ -183,7 +187,11 @@ class LearnedIndex:
         if tel.enabled:
             t0 = time.perf_counter()
             ks, vs, cnt = self._engine.range(lo, hi, max_hits)
-            tel.record_op("range", time.perf_counter() - t0, n)
+            dur = time.perf_counter() - t0
+            tel.record_op("range", dur, n)
+            if tel.trace.enabled:
+                tel.trace.add("op.range", t0=t0, dur_s=dur,
+                              track="facade", n_ops=n)
         else:
             tel.count_ops(n)
             ks, vs, cnt = self._engine.range(lo, hi, max_hits)
@@ -211,7 +219,11 @@ class LearnedIndex:
                 t0 = time.perf_counter()
                 self._log_write(OP_UPSERT, keys, vals)
                 self._engine.upsert(keys, vals)
-                tel.record_op("upsert", time.perf_counter() - t0, len(keys))
+                dur = time.perf_counter() - t0
+                tel.record_op("upsert", dur, len(keys))
+                if tel.trace.enabled:
+                    tel.trace.add("op.upsert", t0=t0, dur_s=dur,
+                                  track="facade", n_ops=len(keys))
             else:
                 tel.count_ops(len(keys))
                 self._log_write(OP_UPSERT, keys, vals)
@@ -228,7 +240,11 @@ class LearnedIndex:
                 t0 = time.perf_counter()
                 self._log_write(OP_DELETE, keys, None)
                 self._engine.delete(keys)
-                tel.record_op("delete", time.perf_counter() - t0, len(keys))
+                dur = time.perf_counter() - t0
+                tel.record_op("delete", dur, len(keys))
+                if tel.trace.enabled:
+                    tel.trace.add("op.delete", t0=t0, dur_s=dur,
+                                  track="facade", n_ops=len(keys))
             else:
                 tel.count_ops(len(keys))
                 self._log_write(OP_DELETE, keys, None)
@@ -242,8 +258,17 @@ class LearnedIndex:
         upsert/delete replay is idempotent, so that is safe; the reverse
         order would acknowledge writes a crash could lose."""
         if self._dur is not None:
-            self._dur.log(op, keys, vals, epoch=self._engine.epoch,
-                          shard_ids=self._engine.shard_ids(keys))
+            tr = self._engine.telemetry.trace
+            if tr.enabled:
+                t0 = time.perf_counter()
+                self._dur.log(op, keys, vals, epoch=self._engine.epoch,
+                              shard_ids=self._engine.shard_ids(keys))
+                tr.add("wal.append", t0=t0,
+                       dur_s=time.perf_counter() - t0, track="wal",
+                       n_ops=len(keys))
+            else:
+                self._dur.log(op, keys, vals, epoch=self._engine.epoch,
+                              shard_ids=self._engine.shard_ids(keys))
 
     def flush(self) -> dict:
         """Fold every pending write through the host tree and republish;
@@ -311,6 +336,56 @@ class LearnedIndex:
         `config.telemetry` off, histograms/spans are zero-count but op and
         retrace accounting are still live."""
         return self._engine.metrics()
+
+    def inspect(self) -> dict:
+        """The `dili.inspect/1` index-health document (DESIGN.md section
+        13): depth/fanout histograms, leaf fill, per-leaf model
+        prediction-error distribution, segment dirty-fraction breakdown,
+        heat accounting, overlay + WAL footprint.  Computed from host-side
+        columns (no device sync); the key tree is identical across
+        engines.  Safe to call on a serving index."""
+        doc = self._engine.inspect()
+        if self._dur is not None:
+            doc["wal"] = dict(doc["wal"], **self._wal_inspect())
+        return doc
+
+    def _wal_inspect(self) -> dict:
+        """On-disk durability footprint (armed indexes only)."""
+        def du(d):
+            # recursive: WAL segments live under shard_NNNNN/ subdirs,
+            # checkpoints under step_NNNNNNNN/ subdirs
+            b = n = 0
+            for root, _dirs, files in os.walk(d):
+                for f in files:
+                    try:
+                        b += os.path.getsize(os.path.join(root, f))
+                        n += 1
+                    except OSError:
+                        pass
+            return b, n
+        wal_b, wal_n = du(str(self._dur.wal_dir))
+        ck_b, ck_n = du(str(self._dur.ckpt_dir))
+        return dict(armed=True, n_shards=len(self._dur.writers),
+                    wal_bytes=int(wal_b), n_wal_files=int(wal_n),
+                    ckpt_bytes=int(ck_b), n_ckpt_files=int(ck_n))
+
+    # -- causal tracing -------------------------------------------------------
+
+    def start_trace(self) -> None:
+        """Arm end-to-end causal tracing (requires `config.telemetry`):
+        facade ops, WAL appends, serve spans, and merge/recovery spans are
+        collected into a bounded ring, linked to the client requests that
+        caused them.  Export with `dump_trace`."""
+        self._engine.telemetry.start_trace()
+
+    def stop_trace(self) -> None:
+        self._engine.telemetry.stop_trace()
+
+    def dump_trace(self, path: str) -> str:
+        """Write the collected trace as Chrome-trace-event JSON (open at
+        https://ui.perfetto.dev).  Returns `path`."""
+        return self._engine.telemetry.trace.dump(
+            path, process_name=f"dili:{self.engine}")
 
     @property
     def telemetry(self):

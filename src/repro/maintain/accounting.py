@@ -83,6 +83,11 @@ class LeafAccounting:
     def __len__(self) -> int:
         return len(self._accounts)
 
+    def accounts(self) -> list[LeafAccount]:
+        """The live accounts (read-only view for `obs.inspect`'s heat
+        summaries)."""
+        return list(self._accounts.values())
+
     def begin_epoch(self) -> None:
         """Advance the merge-epoch counter; called once per merge fold so
         `hot_streak` measures persistence ACROSS merges, not within one."""

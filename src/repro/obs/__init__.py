@@ -11,13 +11,19 @@ engines carry a `Telemetry`, the facade times ops into it,
 from .metrics import (LatencyHistogram, MetricsRegistry, PERCENTILES,
                       latency_summary)
 from .telemetry import NULL_TELEMETRY, OPS, SCHEMA_VERSION, Telemetry
+from .trace_export import (TRACE_SCHEMA_VERSION, TraceBuffer,
+                           current_trace_ids, mint_trace_id, trace_context)
 from .tracing import (MERGE_SPANS, RECOVERY_SPANS, SERVE_SPANS, Span,
                       SpanRecorder)
+from .inspect import INSPECT_SCHEMA_VERSION, build_inspect
 from . import watchdog
 
 __all__ = [
     "LatencyHistogram", "MetricsRegistry", "PERCENTILES", "latency_summary",
     "NULL_TELEMETRY", "OPS", "SCHEMA_VERSION", "Telemetry",
+    "TRACE_SCHEMA_VERSION", "TraceBuffer", "current_trace_ids",
+    "mint_trace_id", "trace_context",
     "MERGE_SPANS", "RECOVERY_SPANS", "SERVE_SPANS", "Span", "SpanRecorder",
+    "INSPECT_SCHEMA_VERSION", "build_inspect",
     "watchdog",
 ]

@@ -17,6 +17,8 @@ the numbers can never disagree on methodology.
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 # the percentile set every latency surface exports: the tail levels a
@@ -132,6 +134,7 @@ class MetricsRegistry:
         self.counters: dict[str, int] = {}
         self.gauges: dict[str, float] = {}
         self.histograms: dict[str, LatencyHistogram] = {}
+        self._warn_calls: dict[str, int] = {}   # warn() rate-limit state
 
     def count(self, name: str, n: int = 1) -> None:
         self.counters[name] = self.counters.get(name, 0) + n
@@ -142,6 +145,24 @@ class MetricsRegistry:
 
     def gauge(self, name: str, value: float) -> None:
         self.gauges[name] = float(value)
+
+    def declare_gauge(self, *names: str) -> None:
+        for name in names:
+            self.gauges.setdefault(name, 0.0)
+
+    def warn(self, name: str, message: str, *, count: int = 1,
+             limit: int = 1) -> None:
+        """Rate-limited structured warning: `warn.<name>` counts every
+        occurrence (floods stay visible in snapshots), but the Python
+        warning itself is emitted only for the first `limit` call sites
+        per registry, so a per-batch condition can't spam stderr.
+        stacklevel=3 points the warning at the engine caller's caller
+        (the user's write), matching what a bare warnings.warn showed."""
+        calls = self._warn_calls.get(name, 0)
+        self._warn_calls[name] = calls + 1
+        self.count(f"warn.{name}", count)
+        if calls < limit:
+            warnings.warn(message, UserWarning, stacklevel=3)
 
     def declare_histogram(self, *names: str) -> None:
         for name in names:

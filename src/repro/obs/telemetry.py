@@ -23,6 +23,7 @@ import time
 
 from . import watchdog
 from .metrics import MetricsRegistry
+from .trace_export import TraceBuffer
 from .tracing import MERGE_SPANS, RECOVERY_SPANS, SpanRecorder
 
 # the facade op set: every engine serves exactly these through
@@ -53,8 +54,20 @@ class Telemetry:
         self.metrics.declare_counter("publish.retraced", "maint.errors",
                                      "maint.reclusters",
                                      "recovery.count",
-                                     "recovery.replayed_records")
+                                     "recovery.replayed_records",
+                                     # structured warning counters
+                                     # (MetricsRegistry.warn): declared so
+                                     # the counter key tree is identical on
+                                     # engines that never warn
+                                     "warn.pallas_f32_collision")
+        # last merge-publish health sample (obs.inspect feeds the full
+        # picture; these gauges are the cheap always-on trend lines)
+        self.metrics.declare_gauge("inspect.n_segments",
+                                   "inspect.dirty_rows",
+                                   "inspect.total_rows",
+                                   "inspect.dirty_fraction")
         self.spans = SpanRecorder(declare=MERGE_SPANS + RECOVERY_SPANS)
+        self.trace = TraceBuffer()
         self.ops_total = 0
         # watchdog window: the build mark anchors "traces since build";
         # mark_warm() anchors the post-warmup (regression) window
@@ -86,6 +99,37 @@ class Telemetry:
     def record_span(self, name: str, dur_s: float, **attrs) -> None:
         if self.enabled:
             self.spans.record(name, dur_s, **attrs)
+
+    # -- causal tracing -------------------------------------------------------
+
+    def start_trace(self) -> None:
+        """Arm causal request tracing: every span the recorder sees is
+        tee'd into the trace buffer (tagged with the recording thread's
+        trace context), alongside the facade/WAL events the hot path adds
+        directly.  Requires `enabled` for the serve/merge spans to be
+        recorded at all."""
+        self.trace.arm()
+        self.spans.sink = self.trace.span_sink
+
+    def stop_trace(self) -> None:
+        self.spans.sink = None
+        self.trace.disarm()
+
+    # -- merge-publish health sample ------------------------------------------
+
+    def sample_publish(self, *, n_segments: int, dirty_rows: int,
+                       total_rows: int) -> None:
+        """Cheap index-health gauges refreshed at every merge publish
+        from flattener segment metadata (no tree walk; the full picture
+        is `LearnedIndex.inspect()`)."""
+        if not self.enabled:
+            return
+        m = self.metrics
+        m.gauge("inspect.n_segments", n_segments)
+        m.gauge("inspect.dirty_rows", dirty_rows)
+        m.gauge("inspect.total_rows", total_rows)
+        m.gauge("inspect.dirty_fraction",
+                dirty_rows / total_rows if total_rows else 0.0)
 
     # -- retrace watchdog -----------------------------------------------------
 

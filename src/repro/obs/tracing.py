@@ -75,6 +75,10 @@ class SpanRecorder:
                  declare: tuple[str, ...] = MERGE_SPANS + RECOVERY_SPANS):
         self.ring: deque[Span] = deque(maxlen=maxlen)
         self._durations: dict[str, list[float]] = {n: [] for n in declare}
+        # optional causal-trace tap: when set (see Telemetry.start_trace)
+        # every recorded span is also forwarded as
+        # `sink(name, t0, dur_s, attrs)` — the TraceBuffer adapter
+        self.sink = None
 
     def record(self, name: str, dur_s: float, t0: float | None = None,
                **attrs) -> None:
@@ -82,6 +86,8 @@ class SpanRecorder:
             t0 = time.perf_counter() - dur_s
         self.ring.append(Span(name, t0, dur_s, attrs))
         self._durations.setdefault(name, []).append(dur_s)
+        if self.sink is not None:
+            self.sink(name, t0, dur_s, attrs)
 
     @contextmanager
     def span(self, name: str, **attrs):

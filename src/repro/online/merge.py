@@ -35,6 +35,7 @@ from ..maintain import (IncrementalFlattener, LeafAccounting,
                         MaintenanceConfig, MaintenanceScheduler,
                         fold_with_accounting, run_reclusters, run_retrains)
 from ..obs import NULL_TELEMETRY
+from ..obs.trace_export import current_trace_ids, trace_context
 from .epoch import EpochStats, SnapshotStore
 from .overlay import (TombstoneOverlay, LIVE, TOMBSTONE, fold_overlay,
                       overlay_device_arrays)
@@ -268,12 +269,21 @@ class OnlineIndex:
         self._leaf_omega = {}
         self._unlocated_keys = []
         t_sub = time.perf_counter()    # -> merge.queue_wait (submit -> start)
+        # causal tracing: the submitting thread's trace context (the
+        # client requests whose writes triggered this merge) rides to the
+        # maintenance worker, so background merge.* spans still link back
+        # to the requests that caused them
+        tids = current_trace_ids()
         if (self.scheduler is not None and not self.maint_degraded
                 and self.scheduler.submit(
-                    lambda: self._merge_impl(frozen, reason, lag, t_sub,
-                                             retry=True))):
+                    lambda: self._merge_on_worker(frozen, reason, lag,
+                                                  t_sub, tids))):
             return self.store.stats
         return self._merge_impl(frozen, reason, lag, t_sub)  # sync/closed
+
+    def _merge_on_worker(self, frozen, reason, lag, t_sub, tids):
+        with trace_context(tids):
+            return self._merge_impl(frozen, reason, lag, t_sub, retry=True)
 
     def _merge_impl(self, frozen: TombstoneOverlay, reason: str,
                     lag: int, t_sub: float,
@@ -384,6 +394,12 @@ class OnlineIndex:
         else:
             self.n_full_flattens += 1
         self.last_dirty_frac = dirty_frac
+        self.tel.sample_publish(
+            n_segments=flat.n_segments,
+            dirty_rows=(self.flattener.last_dirty_rows
+                        if self.flattener is not None else flat.n_slots),
+            total_rows=(self.flattener.last_total_rows
+                        if self.flattener is not None else flat.n_slots))
         with self.tel.span("merge.publish", epoch=self.store.epoch + 1):
             st = self.store.publish(flat, overlay_fill=overlay_fill,
                                     merge_lag=merge_lag,

@@ -36,6 +36,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..obs.trace_export import mint_trace_id, trace_context
 from ..obs.tracing import SERVE_SPANS  # noqa: F401  (re-export convenience)
 from ..workloads.generator import OpBatch
 
@@ -94,7 +95,7 @@ class Request:
 
     __slots__ = ("op", "keys", "vals", "lo", "hi", "max_hits", "client_id",
                  "t_submit", "t_arrival", "t_done", "result", "error",
-                 "_event")
+                 "trace_id", "_event")
 
     def __init__(self, op: str, *, keys=None, vals=None, lo=None, hi=None,
                  max_hits: int = 64, client_id: str = "",
@@ -118,6 +119,10 @@ class Request:
         self.t_done: float | None = None
         self.result = None
         self.error: BaseException | None = None
+        # causal trace id: minted at construction (i.e. at client submit —
+        # `ServeFrontend.submit` builds the Request inline), carried through
+        # coalescing so every downstream stage can link back to this request
+        self.trace_id = mint_trace_id()
         self._event = threading.Event()
 
     @property
@@ -337,6 +342,18 @@ class RequestBatcher:
     def _dispatch(self, group: list[Request], n: int,
                   depth_ops: int) -> None:
         tel = self.tel
+        tracing = tel is not None and tel.enabled and tel.trace.enabled
+        # the member requests' ids become the worker thread's trace
+        # context: every span/event recorded while this batch executes —
+        # serve.queue_wait/exec, the facade op, the WAL append, a merge
+        # the batch triggers — links back to these requests
+        with trace_context(tuple(r.trace_id for r in group) if tracing
+                           else ()):
+            self._dispatch_traced(group, n, depth_ops, tracing)
+
+    def _dispatch_traced(self, group: list[Request], n: int,
+                         depth_ops: int, tracing: bool) -> None:
+        tel = self.tel
         t0 = time.perf_counter()
         if tel is not None and tel.enabled:
             tel.record_span("serve.queue_wait", t0 - group[0].t_submit)
@@ -352,7 +369,8 @@ class RequestBatcher:
             err = e                         # out to every waiting client
         service_s = time.perf_counter() - t0
         if tel is not None and tel.enabled:
-            tel.record_span("serve.exec", service_s, op=group[0].op)
+            tel.record_span("serve.exec", service_s, op=group[0].op,
+                            n_ops=n, n_requests=len(group))
         self.n_batches += 1
         self.batch_ops.append(n)
         self.sizer.observe(depth_ops, service_s)
@@ -368,6 +386,16 @@ class RequestBatcher:
             if tel is not None and tel.enabled:
                 tel.metrics.observe(f"serve.e2e.{r.op}",
                                     t_done - r.t_arrival)
+                if tracing:
+                    # the request's anchor slice: one per trace id, on the
+                    # owning client's track; flow arrows start here
+                    tel.trace.add(
+                        "serve.request", t0=r.t_submit,
+                        dur_s=(r.t_done or t_done) - r.t_submit,
+                        track=f"client:{r.client_id or 'anon'}",
+                        trace_ids=(r.trace_id,), anchor=True,
+                        op=r.op, n_ops=r.n_ops,
+                        ok=r.error is None)
 
     def _execute(self, group: list[Request]) -> None:
         """Run one coalesced facade batch and slice results back out.

@@ -56,6 +56,10 @@ class ServeClient:
 
     def submit(self, op: str, *, t_arrival: float | None = None,
                **payload) -> Request:
+        # constructing the Request here is also where its causal trace id
+        # is minted (Request.__init__) — one id per client submit, carried
+        # through coalescing so `LearnedIndex.dump_trace` can draw the
+        # request -> batch -> facade -> WAL -> merge chain
         req = Request(op, client_id=self.client_id,
                       max_hits=self.frontend.cfg.max_hits,
                       t_arrival=t_arrival, **payload)

@@ -77,14 +77,24 @@ class LoadReport:
 
 
 def open_loop(frontend, batches, rate_ops_per_s: float,
-              n_clients: int = 4, timeout_s: float = 120.0) -> LoadReport:
+              n_clients: int = 4, timeout_s: float = 120.0,
+              trace_path: str | None = None) -> LoadReport:
     """Drive `batches` (each one request) through the frontend at a fixed
     offered rate from `n_clients` concurrent client threads.
 
     Returns after every accepted request completed (the batcher is
     drained) with per-op end-to-end latency samples measured from each
     request's SCHEDULED arrival.  Raises nothing on shed/failed requests
-    — they are counted in the report."""
+    — they are counted in the report.
+
+    `trace_path` arms causal tracing for this leg (requires the index's
+    telemetry to be enabled) and writes the Chrome-trace-event JSON there
+    after the drain — open it in Perfetto to see each request's
+    queue/exec/facade/WAL/merge chain."""
+    tel = getattr(frontend.index, "telemetry", None)
+    tracing = trace_path is not None and tel is not None and tel.enabled
+    if tracing:
+        tel.start_trace()
     report = LoadReport(offered_ops_per_s=float(rate_ops_per_s),
                         n_clients=n_clients)
     report.n_reqs = len(batches)
@@ -129,6 +139,9 @@ def open_loop(frontend, batches, rate_ops_per_s: float,
         t.join(timeout_s)
     frontend.drain(timeout_s)
     report.wall_s = time.perf_counter() - t0
+    if tracing:
+        tel.trace.dump(trace_path)
+        tel.stop_trace()
     report.shed_ops = sum(sheds)
     report.late_submits = sum(lates)
     for reqs in results:

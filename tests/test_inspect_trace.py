@@ -1,0 +1,325 @@
+"""Observability tentpole tests (DESIGN.md section 13 extensions): the
+`dili.inspect/1` index-health document (identical key tree on all three
+engines, sane values), end-to-end causal tracing (serve request ->
+queue_wait -> exec -> facade op -> WAL append with linked merge spans,
+exported as Chrome-trace-event JSON), and the perf-regression sentinel
+(benchmarks/sentinel.py band logic + artifact self-test)."""
+
+import importlib.util
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (DurabilityConfig, IndexConfig, LearnedIndex,
+                       MaintenanceConfig)
+from repro.obs import (INSPECT_SCHEMA_VERSION, TRACE_SCHEMA_VERSION,
+                       TraceBuffer, current_trace_ids, mint_trace_id,
+                       trace_context)
+
+ENGINES = ("local", "pallas", "sharded")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _universe(n=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(1, 10 * n, n)).astype(np.float64)
+    return keys, np.arange(len(keys), dtype=np.int64)
+
+
+def _churn(ix, keys, seed=2, rounds=4):
+    """Write/merge churn so inspect has segments/heat/overlay to report."""
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        ks = rng.integers(1, 10 * len(keys), 512).astype(np.float64)
+        ix.upsert(ks, np.arange(512))
+        ix.delete(ks[:32])
+    ix.flush()
+    ix.lookup(keys[:128])
+
+
+# -- inspect ------------------------------------------------------------------
+
+
+def _shape(d, prefix=""):
+    """Dotted key paths; lists are leaves (depth_hist length may differ
+    across engines — the CONTRACT is the key tree, not list lengths)."""
+    out = []
+    for k in sorted(d):
+        out.append(prefix + k)
+        if isinstance(d[k], dict):
+            out += _shape(d[k], prefix + k + ".")
+    return out
+
+
+def test_inspect_key_tree_identical_across_engines():
+    """Pinned acceptance criterion: `LearnedIndex.inspect()` returns the
+    same `dili.inspect/1` key tree on local, pallas, and sharded."""
+    keys, vals = _universe()
+    shapes, docs = {}, {}
+    for engine in ENGINES:
+        ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+            engine=engine, telemetry=True, overlay_cap=1024))
+        _churn(ix, keys)
+        doc = ix.inspect()
+        json.dumps(doc)                       # JSON-able end to end
+        assert doc["schema"] == INSPECT_SCHEMA_VERSION
+        assert doc["engine"] == engine
+        shapes[engine] = _shape(doc)
+        docs[engine] = doc
+        ix.close()
+    assert shapes["local"] == shapes["pallas"] == shapes["sharded"]
+    # one flat per shard (a single-device host runs the sharded engine
+    # with one shard — the key-tree contract is what's pinned here)
+    assert docs["sharded"]["n_shards"] >= 1
+    assert docs["local"]["n_shards"] == 1
+
+
+def test_inspect_values_sane():
+    keys, vals = _universe()
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="local", telemetry=True, overlay_cap=1024,
+        maintenance=MaintenanceConfig(retrain=False, recluster=True)))
+    _churn(ix, keys)
+    doc = ix.inspect()
+    t, lv = doc["tree"], doc["leaves"]
+    # every node has exactly one depth; the histogram partitions them
+    assert sum(t["depth_hist"]) == t["n_nodes"]
+    # max_depth is the snapshot's traversal bound; the realized node
+    # depths can sit strictly under it
+    assert 1 <= len(t["depth_hist"]) <= t["max_depth"] + 1
+    assert t["n_pairs"] >= len(keys)
+    assert lv["n_leaves"] + lv["n_internal"] == t["n_nodes"]
+    assert 0.0 <= lv["fill"]["p50"] <= lv["fill"]["max"] <= 1.0
+    me = doc["model_error"]
+    assert 0 < me["sampled"] <= t["n_pairs"]
+    # leaf models predict within the leaf by construction
+    assert me["overall"]["max"] <= t["n_slots"]
+    seg = doc["segments"]
+    assert seg["n_segments"] > 0
+    assert seg["dirty_rows"] <= seg["total_rows"]
+    assert 0.0 <= seg["dirty_fraction"] <= 1.0
+    # churn wrote through the accounting: heat must be populated
+    assert doc["heat"]["n_tracked"] > 0
+    assert doc["heat"]["writes"]["max"] >= 1
+    ov = doc["overlay"]
+    assert ov["cap"] == 1024 and ov["pending"] == 0    # post-flush
+    assert not doc["wal"]["armed"]                      # durability off
+    # the cheap publish-time sample landed in the metrics gauges too
+    g = ix.metrics()["gauges"]
+    assert g["inspect.total_rows"] > 0
+    assert 0.0 <= g["inspect.dirty_fraction"] <= 1.0
+    ix.close()
+
+
+def test_inspect_wal_block_when_armed(tmp_path):
+    keys, vals = _universe(n=1024, seed=4)
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="local", overlay_cap=256,
+        durability=DurabilityConfig(dir=str(tmp_path / "dur"),
+                                    fsync="always")))
+    ix.upsert(keys[:64] + 0.0, np.arange(64))
+    doc = ix.inspect()
+    w = doc["wal"]
+    assert w["armed"] and w["n_shards"] == 1
+    assert w["wal_bytes"] > 0 and w["n_wal_files"] >= 1
+    ix.close()
+
+
+# -- causal tracing -----------------------------------------------------------
+
+
+def test_trace_context_propagation():
+    assert current_trace_ids() == ()
+    a, b = mint_trace_id(), mint_trace_id()
+    assert a != b
+    with trace_context((a, b)):
+        assert current_trace_ids() == (a, b)
+        with trace_context((b,)):
+            assert current_trace_ids() == (b,)
+        assert current_trace_ids() == (a, b)
+    assert current_trace_ids() == ()
+
+
+def test_trace_buffer_export_shape(tmp_path):
+    buf = TraceBuffer()
+    buf.add("quiet", t0=0.0, dur_s=1e-3, track="t")     # disarmed: dropped
+    buf.arm()
+    tid = mint_trace_id()
+    buf.add("serve.request", t0=1.0, dur_s=5e-3, track="client:a",
+            trace_ids=(tid,), anchor=True, op="lookup")
+    buf.add("op.lookup", t0=1.002, dur_s=1e-3, track="facade",
+            trace_ids=(tid,), n_ops=64)
+    path = str(tmp_path / "t.json")
+    buf.dump(path)
+    doc = json.load(open(path))
+    assert doc["otherData"]["schema"] == TRACE_SCHEMA_VERSION
+    assert doc["otherData"]["n_exported"] == 2
+    ev = doc["traceEvents"]
+    slices = [e for e in ev if e["ph"] == "X"]
+    assert {e["name"] for e in slices} == {"serve.request", "op.lookup"}
+    for e in slices:
+        assert e["pid"] == 1 and e["dur"] > 0
+        assert tid in e["args"]["trace_ids"]
+    # one flow anchor on the request slice, one step on the facade slice
+    assert sum(e["ph"] == "s" for e in ev) == 1
+    assert sum(e["ph"] == "t" for e in ev) == 1
+    # distinct tracks -> distinct tids with thread_name metadata
+    meta = {e["args"]["name"] for e in ev if e["ph"] == "M"
+            and e["name"] == "thread_name"}
+    assert {"client:a", "facade"} <= meta
+
+
+def test_traced_serve_request_end_to_end(tmp_path):
+    """The ISSUE's acceptance trace: a ycsb_a serve leg with durability
+    armed exports serve.request -> serve.queue_wait -> serve.exec ->
+    facade op -> wal.append, with merge spans from the writes it
+    triggered in the same timeline, all flow-linked by trace id."""
+    from repro.serve import ServeFrontend, open_loop
+    from repro.workloads import PRESETS, generate_stream
+    keys, vals = _universe()
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="local", telemetry=True, overlay_cap=256,
+        maintenance=MaintenanceConfig(background=False),
+        durability=DurabilityConfig(dir=str(tmp_path / "dur"),
+                                    fsync="interval")))
+    spec = PRESETS["ycsb_a"].scaled(n_ops=2000, batch_size=64)
+    batches = list(generate_stream(spec, keys))
+    path = str(tmp_path / "serve_trace.json")
+    with ServeFrontend(ix, journal=False) as fe:
+        rep = open_loop(fe, batches, 50_000.0, n_clients=2,
+                        trace_path=path)
+    assert rep.failed_ops == 0
+    assert ix.stats()["n_merges"] >= 1       # writes crossed the cap
+    ix.close()
+
+    doc = json.load(open(path))
+    assert doc["otherData"]["schema"] == TRACE_SCHEMA_VERSION
+    ev = doc["traceEvents"]
+    slices = [e for e in ev if e["ph"] == "X"]
+    names = {e["name"] for e in slices}
+    for want in ("serve.request", "serve.queue_wait", "serve.exec",
+                 "op.lookup", "op.upsert", "wal.append", "merge.fold",
+                 "merge.publish"):
+        assert want in names, (want, sorted(names))
+    # causal linkage: some trace id minted at submit appears on a
+    # serve.exec slice AND on the wal.append the dispatch performed,
+    # and the sync merge ran inside the dispatch's trace context
+    def ids(name):
+        out = set()
+        for e in slices:
+            if e["name"] == name:
+                out.update(e["args"].get("trace_ids", ()))
+        return out
+    assert ids("serve.exec") & ids("wal.append")
+    assert ids("serve.exec") & ids("merge.publish")
+    # flow events stitch the chain (anchors on the request slices)
+    assert any(e["ph"] == "s" for e in ev)
+    assert any(e["ph"] == "t" for e in ev)
+    # timestamps are normalized microseconds on slices
+    assert all(e["ts"] >= 0 for e in slices)
+
+
+def test_dump_trace_facade_only(tmp_path):
+    """`LearnedIndex.start_trace/dump_trace` works without a serve
+    front-end: direct facade calls land as op.* slices."""
+    keys, vals = _universe(n=1024, seed=5)
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="pallas", telemetry=True))
+    ix.start_trace()
+    ix.lookup(keys[:64])
+    ix.upsert(keys[:16] + 0.0, np.arange(16))
+    ix.stop_trace()
+    path = str(tmp_path / "f.json")
+    meta = ix.dump_trace(path)
+    doc = json.load(open(path))
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"op.lookup", "op.upsert"} <= names
+    assert meta["n_exported"] >= 2
+    # disarmed again: further ops don't grow the buffer
+    n = ix.telemetry.trace.n_events
+    ix.lookup(keys[:64])
+    assert ix.telemetry.trace.n_events == n
+    ix.close()
+
+
+# -- perf-regression sentinel -------------------------------------------------
+
+
+def _sentinel():
+    spec = importlib.util.spec_from_file_location(
+        "sentinel", os.path.join(REPO, "benchmarks", "sentinel.py"))
+    mod = importlib.util.module_from_spec(spec)
+    # dataclass field-annotation resolution needs the module registered
+    sys.modules["sentinel"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _doc(**vals):
+    sec = dict(ns_per_query=100.0, us_per_op=10.0,
+               latency_ms=dict(lookup=dict(count=50, ms_p50=1.0,
+                                           ms_p99=5.0)),
+               ops_per_s=30_000.0, n_merges=7, n_keys=300_000)
+    sec.update(vals)
+    return dict(n_keys=300_000, sections={"workload,x": sec})
+
+
+def test_sentinel_band_logic():
+    s = _sentinel()
+    base = _doc()
+    # identical -> clean
+    deltas, _ = s.compare(base, _doc())
+    assert deltas and all(d.ok for d in deltas)
+    # 2x median -> flagged; counts never compared
+    deltas, _ = s.compare(base, _doc(ns_per_query=200.0, n_merges=700))
+    bad = [d for d in deltas if not d.ok]
+    assert [d.path for d in bad] == ["workload,x.ns_per_query"]
+    assert not any("n_merges" in d.path for d in deltas)
+    # tails get the loose band: 2x p99 ok, 4x flagged
+    nested = dict(lookup=dict(count=50, ms_p50=1.0, ms_p99=10.0))
+    assert all(d.ok for d in s.compare(base, _doc(latency_ms=nested))[0])
+    nested = dict(lookup=dict(count=50, ms_p50=1.0, ms_p99=20.0))
+    bad = [d for d in s.compare(base, _doc(latency_ms=nested))[0]
+           if not d.ok]
+    assert [d.path for d in bad] == \
+        ["workload,x.latency_ms.lookup.ms_p99"]
+    # throughput judged inverted: halving ops_per_s is a regression
+    bad = [d for d in s.compare(base, _doc(ops_per_s=15_000.0))[0]
+           if not d.ok]
+    assert [d.path for d in bad] == ["workload,x.ops_per_s"]
+    assert bad[0].kind == "thrpt"
+    # scale mismatch skips the section wholesale
+    fresh = _doc()
+    fresh["sections"]["workload,x"]["n_keys"] = 10_000_000
+    deltas, notes = s.compare(base, fresh)
+    assert not deltas and any("scale mismatch" in n for n in notes)
+
+
+def test_sentinel_self_test_on_checked_in_artifact(capsys):
+    """The CI tripwire end to end: the repo's own BENCH_PR2.json must
+    pass against itself and catch an injected 2x median regression."""
+    s = _sentinel()
+    with open(os.path.join(REPO, "BENCH_PR2.json")) as fh:
+        baseline = json.load(fh)
+    rc = s.self_test(baseline, median_band=1.6, tail_band=3.0)
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "self-test PASS" in out
+
+
+def test_sentinel_cli_exit_codes(tmp_path, capsys):
+    s = _sentinel()
+    bp = tmp_path / "base.json"
+    fp = tmp_path / "fresh.json"
+    bp.write_text(json.dumps(_doc()))
+    fp.write_text(json.dumps(_doc(ns_per_query=500.0)))
+    assert s.main(["--baseline", str(bp), "--fresh", str(bp)]) == 0
+    assert s.main(["--baseline", str(bp), "--fresh", str(fp)]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "ns_per_query" in out
+    # widened band clears it
+    assert s.main(["--baseline", str(bp), "--fresh", str(fp),
+                   "--median-band", "6.0"]) == 0

@@ -97,8 +97,33 @@ def test_telemetry_snapshot_fixed_taxonomy():
     assert snap["schema"] == "dili.metrics/1"
     assert set(snap["ops"]) == set(OPS)
     assert set(snap["spans"]) == set(MERGE_SPANS + RECOVERY_SPANS)
+    # recovery.* spans are pre-declared: zero-filled summaries with the
+    # full latency_summary key set BEFORE any recovery has ever run, so
+    # a fresh index and a recovered one export the same schema
+    for s in RECOVERY_SPANS:
+        assert s.startswith("recovery."), s
+        assert snap["spans"][s]["count"] == 0, s
+        assert set(snap["spans"][s]) == set(latency_summary([])) | {"count"}
     assert snap["retrace"]["post_warmup_traces"] == 0
     json.dumps(snap)
+
+
+def test_registry_warn_rate_limited():
+    """Structured warnings: the Python warning fires once per registry
+    (rate limit), while the `warn.<name>` counter keeps accumulating the
+    full magnitude — and declaring the counter never emits anything."""
+    reg = MetricsRegistry()
+    with pytest.warns(UserWarning, match="7 keys collided"):
+        reg.warn("collisions", "7 keys collided", count=7)
+    # subsequent calls are silent but still counted
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        reg.warn("collisions", "3 more", count=3)
+        reg.warn("collisions", "5 more", count=5)
+    assert reg.snapshot()["counters"]["warn.collisions"] == 15
+    # rate-limit bookkeeping must NOT leak into the counter schema
+    assert set(reg.snapshot()["counters"]) == {"warn.collisions"}
 
 
 # -- watchdog -----------------------------------------------------------------
@@ -179,6 +204,12 @@ def test_metrics_schema_equivalent_across_engines():
         json.dumps(m)
         assert m["enabled"] and m["engine"] == engine
         assert m["ops"]["lookup"]["count"] > 0
+        # the declared-everywhere surfaces ride along on every engine:
+        # recovery.* spans (zero-filled without a recovery) and the
+        # structured-warning counter (zero unless the pallas quantizer
+        # actually collided)
+        assert set(RECOVERY_SPANS) <= set(m["spans"])
+        assert "warn.pallas_f32_collision" in m["counters"]
         shapes[engine] = shape(m)
         ix.close()
     assert shapes["local"] == shapes["pallas"] == shapes["sharded"]
@@ -259,6 +290,30 @@ def test_zero_post_warmup_retraces_sharded_mixed():
     assert r["warmed"]
     assert r["post_warmup_ops"] > 0
     assert r["post_warmup_traces"] == 0, r
+    assert r["retraces_per_1k_ops"] == 0.0
+    ix.close()
+
+
+@pytest.mark.parametrize("vmem_budget", [12 * 1024 * 1024, 1024])
+def test_zero_post_warmup_retraces_pallas_mixed(vmem_budget):
+    """Same contract on the pallas engine, on BOTH sides of the
+    kernel-dispatch boundary: with the default VMEM budget the snapshot
+    tables fit and lookups go through the Pallas kernel wrapper; with a
+    tiny budget every batch dispatches to the XLA fallback.  Either way
+    a steady mixed workload after warmup must mint no new executables —
+    and crossing the boundary must be a BUILD-time decision, never a
+    per-batch retrace."""
+    from repro.workloads import PRESETS, WorkloadRunner, generate_stream
+    keys, vals = _universe()
+    ix = LearnedIndex.build(keys, vals, config=IndexConfig(
+        engine="pallas", telemetry=True, vmem_budget_bytes=vmem_budget))
+    spec = PRESETS["ycsb_a"].scaled(n_ops=3000, batch_size=128)
+    WorkloadRunner(ix, warmup_batches=4).run(
+        generate_stream(spec, keys), spec=spec)
+    r = ix.metrics()["retrace"]
+    assert r["warmed"]
+    assert r["post_warmup_ops"] > 0
+    assert r["post_warmup_traces"] == 0, (vmem_budget, r)
     assert r["retraces_per_1k_ops"] == 0.0
     ix.close()
 
